@@ -1,0 +1,75 @@
+"""Kernel micro-benchmarks: XLA reference path timing on CPU (wall) +
+roofline-relevant derived numbers. Pallas kernels run in interpret mode on
+CPU, so wall-clock here benchmarks the XLA oracle; kernel perf on TPU is
+covered by the §Roofline analysis of the lowered HLO."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ops import ranking_scores
+
+from .common import emit
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.tree.map(lambda a: a.block_until_ready(), out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run() -> list[dict]:
+    rows = []
+    ks = jax.random.split(jax.random.key(0), 5)
+
+    # attention ref (the XLA path the models lower)
+    b, s, h, kv, dh = 1, 1024, 8, 2, 64
+    q = jax.random.normal(ks[0], (b, s, h, dh), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, s, kv, dh), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, s, kv, dh), jnp.bfloat16)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    f = jax.jit(lambda *a: ref.flash_attention_ref(*a, pos, pos))
+    us = _time(f, q, k, v)
+    flops = 4 * b * s * s * h * dh * 0.5
+    rows.append(dict(name="attention_ref_1k", us_per_call=round(us, 1),
+                     derived=f"{flops/us/1e3:.1f}MFLOP/s_cpu"))
+
+    # GLA chunked oracle
+    from repro.models.ssm import chunked_gla
+    bq, sq, hq, dk = 1, 1024, 4, 64
+    qg = jax.random.normal(ks[0], (bq, sq, hq, dk), jnp.float32)
+    kg = jax.random.normal(ks[1], (bq, sq, hq, dk), jnp.float32) * 0.3
+    vg = jax.random.normal(ks[2], (bq, sq, hq, dk), jnp.float32)
+    lf = -jax.nn.softplus(-jax.random.normal(ks[3], (bq, sq, hq)))
+    li = -jax.nn.softplus(-jax.random.normal(ks[4], (bq, sq, hq)))
+    g = jax.jit(lambda *a: chunked_gla(*a, chunk=128)[0])
+    us = _time(g, qg, kg, vg, lf, li)
+    rows.append(dict(name="gla_chunked_1k", us_per_call=round(us, 1),
+                     derived=f"chunk128"))
+
+    # eviction ranking kernel (interpret) vs jnp ref — correctness-critical path
+    n = 8192
+    lam = jax.random.uniform(ks[0], (n,), minval=0.01, maxval=10)
+    z = jax.random.uniform(ks[1], (n,), minval=0.001, maxval=1)
+    r = jax.random.uniform(ks[2], (n,), minval=0.01, maxval=10)
+    sz = jax.random.uniform(ks[3], (n,), minval=1, maxval=100)
+    c = jnp.ones((n,), bool)
+    fr = jax.jit(lambda *a: ref.ranking_scores_ref(*a, 1.0)[0])
+    us = _time(fr, lam, z, r, sz, c)
+    rows.append(dict(name="ranking_ref_8k", us_per_call=round(us, 1),
+                     derived=f"{n/us:.1f}obj/us"))
+    return rows
+
+
+def main():
+    emit(run(), "bench_kernels")
+
+
+if __name__ == "__main__":
+    main()

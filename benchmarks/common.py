@@ -1,0 +1,61 @@
+"""Shared benchmark utilities: CSV emit + policy sweep runner."""
+from __future__ import annotations
+
+import csv
+import sys
+import time
+from pathlib import Path
+
+import jax
+
+RESULTS_DIR = Path(__file__).parent / "results"
+
+POLICY_SET = ["lru", "lfu", "lhd", "adaptsize", "lru_mad", "lhd_mad",
+              "lac", "cala", "vacdh", "lrb_lite", "stoch_vacdh"]
+
+
+def emit(rows: list[dict], name: str, echo: bool = True) -> Path:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    path = RESULTS_DIR / f"{name}.csv"
+    if rows:
+        fields = list(dict.fromkeys(k for r in rows for k in r))
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=fields, restval="")
+            w.writeheader()
+            w.writerows(rows)
+    if echo:
+        for r in rows:
+            print(",".join(str(v) for v in r.values()))
+    return path
+
+
+def improvement_table(trace, capacity, policies=POLICY_SET, params=None,
+                      extra: dict | None = None,
+                      estimate_z: bool = True) -> list[dict]:
+    """Latency improvement vs LRU (paper eq. 17) for each policy.
+    estimate_z=True: policies see only observed fetch durations (the paper's
+    operational setting for stochastic latency)."""
+    from repro.core import PolicyParams, simulate
+    params = params or PolicyParams()
+    base = simulate(trace, capacity, "lru", params, estimate_z=estimate_z)
+    lru_lat = float(base.total_latency)
+    rows = []
+    for pol in policies:
+        t0 = time.time()
+        r = simulate(trace, capacity, pol, params, estimate_z=estimate_z)
+        lat = float(r.total_latency)
+        rows.append(dict(
+            policy=pol,
+            latency=round(lat, 4),
+            improvement_vs_lru=round((lru_lat - lat) / lru_lat, 5),
+            hit_ratio=round(float(r.hit_ratio), 4),
+            delayed_ratio=round(float(r.n_delayed)
+                                / max(float(r.n_requests), 1), 4),
+            sim_s=round(time.time() - t0, 2),
+            **(extra or {})))
+    return rows
+
+
+def block_until_ready_tree(x):
+    jax.tree.map(lambda a: a.block_until_ready()
+                 if hasattr(a, "block_until_ready") else a, x)

@@ -1,0 +1,52 @@
+"""Paper Fig. 4: sensitivity to omega (variance weight) and the estimation
+window (paper's S; here the per-object EWMA factor gap_alpha, reported as the
+window-equivalent length W ~ 2/alpha - 1). L = 5 ms as in §5.4."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.core import PolicyParams
+from repro.data.traces import SyntheticSpec, synthetic_trace
+
+from .common import emit, improvement_table
+
+
+def run(full: bool = False, seed: int = 0) -> list[dict]:
+    n_req = 100_000 if full else 30_000
+    spec = SyntheticSpec(n_objects=100, n_requests=n_req, rate=2000.0,
+                         latency_base=0.005, latency_per_mb=2e-4,
+                         stochastic=True)
+    trace = synthetic_trace(jax.random.key(seed), spec)
+    rows = []
+    omegas = (0.0, 0.25, 0.5, 1.0, 2.0, 4.0) if full else (0.0, 1.0, 2.0)
+    for omega in omegas:
+        rows += improvement_table(
+            trace, 500.0, policies=["vacdh", "stoch_vacdh"],
+            params=PolicyParams(omega=omega),
+            extra=dict(sweep="omega", omega=omega, window=64))
+    windows = (4, 16, 64, 256, 1024) if full else (4, 64, 1024)
+    for w in windows:
+        rows += improvement_table(
+            trace, 500.0, policies=["stoch_vacdh"],
+            params=PolicyParams(omega=1.0, window=w),
+            extra=dict(sweep="window", omega=1.0, window=w))
+    # residual-estimator ablation (rate vs LRU-recency proxy)
+    for mode in ("rate", "recency"):
+        rows += improvement_table(
+            trace, 500.0, policies=["stoch_vacdh", "vacdh", "lac"],
+            params=PolicyParams(omega=1.0, resid=mode),
+            extra=dict(sweep="resid", omega=1.0, window=64, resid=mode))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    emit(run(full=args.full), "fig4_sensitivity")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Memory forensics for a dry-run cell: compile a layer-reduced variant and
+dump the largest HLO buffers (by result shape) + temp scaling vs n_layers."""
+import argparse
+import dataclasses
+import re
+import sys
+from collections import Counter
+
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+_SHAPE = re.compile(r"= (\w+)\[([0-9,]+)\]")
+_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s32": 4,
+          "u32": 4, "f32": 4, "s64": 8, "f64": 8}
+
+
+def top_buffers(hlo, n=25):
+    sizes = Counter()
+    for m in _SHAPE.finditer(hlo):
+        dt, dims = m.groups()
+        el = 1
+        for d in dims.split(","):
+            el *= int(d)
+        b = el * _BYTES.get(dt, 4)
+        if b > 64 * 2**20:
+            sizes[f"{dt}[{dims}]"] += 1
+    items = sorted(sizes.items(),
+                   key=lambda kv: -_size_of(kv[0]))[:n]
+    return [(k, c, _size_of(k) / 2**30) for k, c in items]
+
+
+def _size_of(s):
+    dt, dims = re.match(r"(\w+)\[([0-9,]+)\]", s).groups()
+    el = 1
+    for d in dims.split(","):
+        el *= int(d)
+    return el * _BYTES.get(dt, 4)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="grok-1-314b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--layers", type=int, nargs="+", default=[2, 4])
+    args = ap.parse_args()
+
+    from repro.configs import registry
+    from repro.launch.cells import input_specs
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    for L in args.layers:
+        cfg = dataclasses.replace(registry.get(args.arch), n_layers=L)
+        with mesh:
+            cell = input_specs(cfg, args.shape, mesh)
+            comp = jax.jit(cell.fn, donate_argnums=cell.donate).lower(
+                *cell.args).compile()
+        ma = comp.memory_analysis()
+        print(f"\n=== {args.arch} L={L} {args.shape}@{args.mesh}: "
+              f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+              f"args={ma.argument_size_in_bytes/2**30:.2f}GiB ===")
+        for shape_s, count, gib in top_buffers(comp.as_text()):
+            print(f"  {gib:8.2f} GiB x{count:<4d} {shape_s}")
+
+
+if __name__ == "__main__":
+    main()

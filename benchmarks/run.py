@@ -1,0 +1,45 @@
+"""Benchmark driver: one function per paper table/figure.
+Prints ``name,us_per_call,derived``-style CSV per benchmark and writes
+benchmarks/results/*.csv.  --full reproduces the paper-scale settings."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slower)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig2,fig3,fig4,fig5,kernels")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    from . import (bench_kernels, fig2_synthetic, fig3_trace_stats,
+                   fig4_sensitivity, fig5_real_traces)
+    from .common import emit
+
+    jobs = [
+        ("fig3", lambda: emit(fig3_trace_stats.run(), "fig3_trace_stats")),
+        ("fig2", lambda: emit(fig2_synthetic.run(full=args.full),
+                              "fig2_synthetic")),
+        ("fig4", lambda: emit(fig4_sensitivity.run(full=args.full),
+                              "fig4_sensitivity")),
+        ("fig5", lambda: emit(fig5_real_traces.run(full=args.full),
+                              "fig5_real_traces")),
+        ("kernels", lambda: emit(bench_kernels.run(), "bench_kernels")),
+    ]
+    for name, fn in jobs:
+        if want and name not in want:
+            continue
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        fn()
+        print(f"[{name}] done in {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,18 @@
+"""Core library: the paper's delayed-hit caching technique.
+
+- :mod:`delay_stats` — Theorem 1 & 2 analytic moments + Monte-Carlo oracle.
+- :mod:`ranking`     — eq. 16 variance-aware ranking + every §5.1 baseline.
+- :mod:`simulator`   — vectorized lax.scan trace simulator.
+- :mod:`refsim`      — event-driven reference (test oracle).
+- :mod:`trace`       — trace schema.
+"""
+from .delay_stats import (det_mean, det_var, stoch_mean, stoch_std, stoch_var)
+from .ranking import BASELINES, OURS, POLICIES, Policy, PolicyParams
+from .simulator import SimResult, latency_improvement, simulate
+from .trace import Trace, make_trace
+
+__all__ = [
+    "det_mean", "det_var", "stoch_mean", "stoch_std", "stoch_var",
+    "BASELINES", "OURS", "POLICIES", "Policy", "PolicyParams",
+    "SimResult", "latency_improvement", "simulate", "Trace", "make_trace",
+]

@@ -1,0 +1,101 @@
+"""Analytic statistics of the aggregate delay D_i for delayed-hit caching.
+
+This module is the paper's Theorem 1 (deterministic miss latency, from
+VA-CDH [16]) and Theorem 2 (stochastic, exponentially distributed miss
+latency — the paper's contribution), plus Monte-Carlo machinery used by the
+tests to validate both theorems against simulation.
+
+Notation (paper §2.1):
+    lambda_i : Poisson arrival rate of object i
+    z_i      : mean miss (fetch) latency of object i; Z_i ~ Exp(1/z_i)
+    D_i      : aggregate delay = Z_i + sum over arrivals t' in (t, t+Z_i] of
+               the remaining fetch time (t + Z_i - t').
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "det_mean",
+    "det_var",
+    "stoch_mean",
+    "stoch_var",
+    "stoch_std",
+    "mc_aggregate_delay",
+    "mc_moments",
+]
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 (deterministic miss latency z): E[D] = z(1 + lambda z / 2),
+# Var[D] = lambda z^3 / 3.
+# ---------------------------------------------------------------------------
+def det_mean(lam, z):
+    """Mean aggregate delay under deterministic miss latency (Theorem 1)."""
+    lam, z = jnp.asarray(lam), jnp.asarray(z)
+    return z * (1.0 + 0.5 * lam * z)
+
+
+def det_var(lam, z):
+    """Variance of aggregate delay under deterministic miss latency (Theorem 1)."""
+    lam, z = jnp.asarray(lam), jnp.asarray(z)
+    return lam * z**3 / 3.0
+
+
+# ---------------------------------------------------------------------------
+# Theorem 2 (stochastic miss latency Z ~ Exp(1/z)):
+#   E[D]   = z + lambda z^2
+#   Var[D] = z^2 + 6 lambda z^3 + 5 lambda^2 z^4
+# ---------------------------------------------------------------------------
+def stoch_mean(lam, z):
+    """Mean aggregate delay under Exp-distributed miss latency (Theorem 2, eq.6)."""
+    lam, z = jnp.asarray(lam), jnp.asarray(z)
+    return z + lam * z**2
+
+
+def stoch_var(lam, z):
+    """Variance of aggregate delay under Exp miss latency (Theorem 2, eq.7)."""
+    lam, z = jnp.asarray(lam), jnp.asarray(z)
+    z2 = z * z
+    return z2 + 6.0 * lam * z2 * z + 5.0 * lam * lam * z2 * z2
+
+
+def stoch_std(lam, z):
+    """Standard deviation of aggregate delay under Exp miss latency."""
+    return jnp.sqrt(stoch_var(lam, z))
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo oracle.
+#
+# One sample of D: draw Z (either deterministic or Exp(1/z)); draw
+# K ~ Poisson(lambda * Z) arrivals; conditional on K, arrival offsets are iid
+# Uniform(0, Z]; each contributes remaining time Z - U ~ Uniform[0, Z).
+# So D = Z + sum_{j<K} (Z - U_j) = Z + sum_j V_j with V_j ~ U[0, Z).
+# ---------------------------------------------------------------------------
+def mc_aggregate_delay(key: jax.Array, lam: float, z: float, n: int,
+                       stochastic: bool = True, max_k: int = 512) -> jax.Array:
+    """Draw ``n`` iid samples of the aggregate delay D.
+
+    ``max_k`` truncates the Poisson count; with lam*z <= 32 the truncation mass
+    at 512 is < 1e-200, i.e. irrelevant for the tests.
+    """
+    kz, kk, ku = jax.random.split(key, 3)
+    if stochastic:
+        Z = jax.random.exponential(kz, (n,)) * z
+    else:
+        Z = jnp.full((n,), z)
+    K = jax.random.poisson(kk, lam * Z, (n,))
+    K = jnp.minimum(K, max_k)
+    # Uniform residuals: mask out draws beyond K.
+    U = jax.random.uniform(ku, (n, max_k)) * Z[:, None]
+    mask = jnp.arange(max_k)[None, :] < K[:, None]
+    return Z + jnp.where(mask, U, 0.0).sum(axis=-1)
+
+
+def mc_moments(key: jax.Array, lam: float, z: float, n: int,
+               stochastic: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Monte-Carlo (mean, variance) of D with ``n`` samples."""
+    d = mc_aggregate_delay(key, lam, z, n, stochastic=stochastic)
+    return d.mean(), d.var(ddof=1)

@@ -1,0 +1,234 @@
+"""Eviction ranking functions.
+
+Every ranking function maps the per-object statistics to a score vector
+(shape [N]); **higher score = more valuable = keep**. The simulator evicts
+``argmin`` over cached objects and admits an incoming object only while the
+victim's score is strictly below the incomer's (paper §2.2 toy-example
+semantics).
+
+The paper's contribution is :func:`rank_stochastic_vacdh` (eq. 16), built on
+Theorem 2; every baseline from §5.1 is implemented alongside, under the same
+online-estimation substrate, so comparisons are apples-to-apples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import delay_stats as ds
+from .state import ObjStats
+
+EPS = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyParams:
+    """Hyperparameters shared by the ranking functions.
+
+    omega      — variance-sensitivity weight (paper's w; eq. 15/16).
+    window     — per-object estimation window W (samples): the inter-arrival
+                 mean is a running mean for the first W gaps, then an
+                 EWMA(1/W).  Emulates the paper's sliding window S
+                 (W ~ S * p_i for an object with popularity p_i).
+    resid      — residual-time estimator for eq. 15/16's R_i:
+                 'rate'    : R = 1/lambda (exact for Poisson, memoryless);
+                 'recency' : R = t - last_access (LRU proxy).
+    cala_beta  — CALA's weight between historical AggDelay and the analytic
+                 mean-based estimate.
+    adapt_c    — AdaptSize admission scale (admit w.p. exp(-size/adapt_c)).
+    cold_rate  — arrival-rate prior for objects with <2 observations.
+
+    Registered as a JAX pytree (float fields are leaves; window/resid are
+    static metadata) so hyperparameter sweeps (fig4) trace once.
+    """
+
+    omega: float = 1.0
+    cala_beta: float = 0.5
+    adapt_c: float = 25.0
+    cold_rate: float = 1e-3
+    window: int = dataclasses.field(default=64, metadata=dict(static=True))
+    resid: str = dataclasses.field(default="recency",
+                                   metadata=dict(static=True))
+
+    @property
+    def gap_alpha(self) -> float:
+        return 1.0 / self.window
+
+
+jax.tree_util.register_dataclass(
+    PolicyParams,
+    data_fields=["omega", "cala_beta", "adapt_c", "cold_rate"],
+    meta_fields=["window", "resid"])
+
+
+# ---------------------------------------------------------------------------
+# Online estimators (shared substrate)
+# ---------------------------------------------------------------------------
+def lambda_hat(o: ObjStats, p: PolicyParams) -> jax.Array:
+    """Per-object arrival-rate estimate: inverse windowed mean inter-arrival."""
+    lam = 1.0 / jnp.maximum(o.gap_mean, EPS)
+    return jnp.where(o.count >= 2.0, lam, p.cold_rate)
+
+
+def residual_hat(o: ObjStats, t: jax.Array,
+                 p: PolicyParams | None = None) -> jax.Array:
+    """Estimated residual time until the next request (paper §4's R_i).
+
+    Default 'recency': the LRU proxy t - last_access — what VA-CDH [16]
+    and the paper use ("R_i ... using LRU", §4); the paper-faithful setting.
+    'rate' (1/lambda_hat — the memoryless MLE for Poisson) is this repo's
+    beyond-paper improvement: it lifts the whole ranking family by ~8pp on
+    synthetic workloads (EXPERIMENTS.md §Beyond)."""
+    if p is not None and p.resid == "recency":
+        return jnp.maximum(t - o.last_access, EPS)
+    lam = lambda_hat(o, p or PolicyParams())
+    return 1.0 / jnp.maximum(lam, EPS)
+
+
+def agg_mean_hat(o: ObjStats) -> jax.Array:
+    """Historical mean aggregate delay; falls back to z_est before any episode."""
+    m = o.agg_sum / jnp.maximum(o.agg_cnt, 1.0)
+    return jnp.where(o.agg_cnt > 0.0, m, o.z_est)
+
+
+def agg_std_hat(o: ObjStats) -> jax.Array:
+    """Population std of historical aggregate delay (0 before 2 episodes)."""
+    n = jnp.maximum(o.agg_cnt, 1.0)
+    m = o.agg_sum / n
+    var = jnp.maximum(o.agg_sq_sum / n - m * m, 0.0)
+    return jnp.where(o.agg_cnt >= 2.0, jnp.sqrt(var), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Ranking functions.  Signature: (obj, sizes, t, params) -> scores [N]
+# ---------------------------------------------------------------------------
+RankFn = Callable[[ObjStats, jax.Array, jax.Array, PolicyParams], jax.Array]
+
+
+def rank_lru(o, sizes, t, p):
+    """LRU — most recently used is most valuable."""
+    return o.last_access
+
+
+def rank_lfu(o, sizes, t, p):
+    """LFU — request count."""
+    return o.count
+
+
+def rank_lhd(o, sizes, t, p):
+    """LHD-lite: hit density = expected hit rate per byte.
+
+    The full LHD maintains age-binned hit/eviction histograms; under Poisson
+    arrivals its hit density converges to lambda/size, which is what the
+    online estimate here computes.  Documented approximation (DESIGN.md §4).
+    """
+    return lambda_hat(o, p) / jnp.maximum(sizes, EPS)
+
+
+def rank_adaptsize(o, sizes, t, p):
+    """AdaptSize ranks like LRU; its contribution is the size-aware admission
+    filter (handled by the simulator via ``admission='adaptsize'``)."""
+    return o.last_access
+
+
+def rank_greedydual(o, sizes, t, p):
+    """GreedyDual H value — used by LRU-MAD / LHD-MAD; H maintained by the
+    simulator (clock + cost/size on access, clock <- H_victim on eviction)."""
+    return o.gd_h
+
+
+def rank_lac(o, sizes, t, p):
+    """LAC: mean aggregate delay under *deterministic* latency, per byte and
+    per unit residual time (variance-blind; omega = 0)."""
+    lam = lambda_hat(o, p)
+    e = ds.det_mean(lam, o.z_est)
+    return e / (residual_hat(o, t, p) * jnp.maximum(sizes, EPS))
+
+
+def rank_cala(o, sizes, t, p):
+    """CALA: weighted blend of historical AggDelay and the analytic estimate
+    (balances imprecise averages vs conservative bounds, per §1)."""
+    lam = lambda_hat(o, p)
+    analytic = ds.det_mean(lam, o.z_est)
+    est = p.cala_beta * agg_mean_hat(o) + (1.0 - p.cala_beta) * analytic
+    return est / (residual_hat(o, t, p) * jnp.maximum(sizes, EPS))
+
+
+def rank_vacdh(o, sizes, t, p):
+    """VA-CDH [16]: eq. 15 with Theorem 1 (deterministic-latency) moments."""
+    lam = lambda_hat(o, p)
+    e = ds.det_mean(lam, o.z_est)
+    s = jnp.sqrt(ds.det_var(lam, o.z_est))
+    return (e + p.omega * s) / (residual_hat(o, t, p) * jnp.maximum(sizes, EPS))
+
+
+def rank_stochastic_vacdh(o, sizes, t, p):
+    """THE PAPER: eq. 16 — Theorem 2 moments for Exp-distributed latency."""
+    lam = lambda_hat(o, p)
+    e = ds.stoch_mean(lam, o.z_est)
+    s = ds.stoch_std(lam, o.z_est)
+    return (e + p.omega * s) / (residual_hat(o, t, p) * jnp.maximum(sizes, EPS))
+
+
+def rank_lrb_lite(o, sizes, t, p):
+    """LRB-lite: learned-baseline stand-in — score by predicted next-use
+    proximity blending recency and rate (a fixed linear model over the same
+    features LRB learns; see DESIGN.md §4)."""
+    lam = lambda_hat(o, p)
+    r = residual_hat(o, t, p)
+    # Expected remaining time to next arrival for a Poisson process given the
+    # age r is 1/lam regardless; blend with recency to mimic LRB's learned mix.
+    pred_next = 1.0 / jnp.maximum(lam, EPS) + 0.5 * r
+    return -pred_next / jnp.maximum(sizes, EPS) * agg_mean_hat(o)
+
+
+def rank_toy_mean(o, sizes, t, p):
+    """Fig.1 Policy 1 — empirical mean aggregate delay, unnormalized."""
+    return agg_mean_hat(o)
+
+
+def rank_toy_meanstd(o, sizes, t, p):
+    """Fig.1 Policy 2 — empirical mean + population std, unnormalized."""
+    return agg_mean_hat(o) + agg_std_hat(o)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    name: str
+    rank: RankFn
+    greedydual: bool = False       # maintain gd_h / clock
+    gd_cost: str = "agg"           # 'agg' (LRU-MAD) | 'agg_rate' (LHD-MAD)
+    admission: str = "always"      # 'always' | 'adaptsize'
+    # Rank-compare admission (paper §2.2: only evict victims ranked strictly
+    # below the incomer; abort otherwise).  True for the delayed-hit ranking
+    # family (incl. GreedyDual-style MAD); False reproduces the classical
+    # baselines' published always-admit behavior.
+    compare_admission: bool = True
+
+
+POLICIES: dict[str, Policy] = {
+    "lru": Policy("lru", rank_lru, compare_admission=False),
+    "lfu": Policy("lfu", rank_lfu, compare_admission=False),
+    "lhd": Policy("lhd", rank_lhd, compare_admission=False),
+    "adaptsize": Policy("adaptsize", rank_adaptsize, admission="adaptsize",
+                        compare_admission=False),
+    "lru_mad": Policy("lru_mad", rank_greedydual, greedydual=True, gd_cost="agg"),
+    "lhd_mad": Policy("lhd_mad", rank_greedydual, greedydual=True, gd_cost="agg_rate"),
+    "lac": Policy("lac", rank_lac),
+    "cala": Policy("cala", rank_cala),
+    "vacdh": Policy("vacdh", rank_vacdh),
+    "stoch_vacdh": Policy("stoch_vacdh", rank_stochastic_vacdh),  # ours
+    "lrb_lite": Policy("lrb_lite", rank_lrb_lite),
+    "toy_mean": Policy("toy_mean", rank_toy_mean),
+    "toy_meanstd": Policy("toy_meanstd", rank_toy_meanstd),
+}
+
+OURS = "stoch_vacdh"
+BASELINES = ["lru", "lfu", "lhd", "adaptsize", "lru_mad", "lhd_mad",
+             "lac", "cala", "vacdh", "lrb_lite"]

@@ -1,0 +1,129 @@
+"""Event-driven reference simulator (pure Python, heap-based).
+
+Ground truth for :mod:`repro.core.simulator`: classic discrete-event loop with
+an explicit completion-event heap.  It reuses the *same* ranking functions on
+the same ``ObjStats`` container so any disagreement with the scan simulator is
+a semantics bug, not a formula drift.  Only used by tests (tiny traces).
+"""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+from .ranking import POLICIES, PolicyParams, lambda_hat, agg_mean_hat
+from .state import ObjStats
+from .trace import Trace
+
+
+def _gd_cost(policy, o: ObjStats, sizes, p):
+    cost = np.asarray(agg_mean_hat(o))
+    if policy.gd_cost == "agg_rate":
+        cost = cost * np.asarray(lambda_hat(o, p))
+    return cost / np.maximum(sizes, 1e-6)
+
+
+def simulate_ref(trace: Trace, capacity: float, policy_name: str,
+                 params: PolicyParams | None = None,
+                 estimate_z: bool = False) -> dict:
+    p = params or PolicyParams()
+    policy = POLICIES[policy_name]
+    if policy.admission != "always":
+        raise NotImplementedError("refsim only covers coin-free policies")
+
+    times = np.asarray(trace.times, np.float32)
+    objs = np.asarray(trace.objs, np.int64)
+    sizes = np.asarray(trace.sizes, np.float32)
+    z_draw = np.asarray(trace.z_draw, np.float32)
+    n = sizes.shape[0]
+
+    f = lambda v: np.full(n, v, np.float32)
+    o = ObjStats(
+        cached=np.zeros(n, bool), in_flight=np.zeros(n, bool),
+        complete_t=f(np.inf), issue_t=f(0.0),
+        last_access=f(-np.inf), first_access=f(-np.inf),
+        gap_mean=f(0.0), count=f(0.0),
+        z_est=np.asarray(trace.z_mean, np.float32).copy(),
+        agg_sum=f(0.0), agg_sq_sum=f(0.0), agg_cnt=f(0.0),
+        episode_delay=f(0.0), gd_h=f(0.0),
+    )
+    o = ObjStats(*(a.copy() for a in o))
+
+    free = np.float32(capacity)
+    gd_clock = np.float32(0.0)
+    heap: list[tuple[float, int]] = []   # (complete_t, obj)
+    total = 0.0
+    hits = delayed = misses = evictions = 0
+
+    def commit(j: int, t_c: float):
+        nonlocal free, gd_clock, evictions
+        realized = t_c - o.issue_t[j]
+        ep = o.episode_delay[j]
+        o.agg_sum[j] += ep
+        o.agg_sq_sum[j] += ep * ep
+        o.agg_cnt[j] += 1.0
+        o.episode_delay[j] = 0.0
+        o.in_flight[j] = False
+        o.complete_t[j] = np.inf
+        if estimate_z:
+            o.z_est[j] = 0.7 * o.z_est[j] + 0.3 * realized
+        if policy.greedydual:
+            o.gd_h[j] = gd_clock + _gd_cost(policy, o, sizes, p)[j]
+        ranks = np.asarray(policy.rank(o, sizes, np.float32(t_c), p),
+                           np.float32)
+        rank_j = ranks[j]
+        ok = True
+        while ok and free < sizes[j]:
+            vr = np.where(o.cached, ranks, np.inf)
+            v = int(np.argmin(vr))
+            if vr[v] < (rank_j if policy.compare_admission else np.inf):
+                o.cached[v] = False
+                free += sizes[v]
+                evictions += 1
+                if policy.greedydual:
+                    gd_clock = max(gd_clock, vr[v])
+            else:
+                ok = False
+        if ok and free >= sizes[j]:
+            o.cached[j] = True
+            free -= sizes[j]
+
+    for k in range(len(times)):
+        t, i = float(times[k]), int(objs[k])
+        while heap and heap[0][0] <= t:
+            t_c, j = heapq.heappop(heap)
+            commit(j, t_c)
+        # serve
+        if o.cached[i]:
+            lat = 0.0
+            hits += 1
+        elif o.in_flight[i]:
+            lat = max(float(o.complete_t[i]) - t, 0.0)
+            o.episode_delay[i] += np.float32(lat)
+            delayed += 1
+        else:
+            z = float(z_draw[k])
+            lat = z
+            o.in_flight[i] = True
+            o.complete_t[i] = np.float32(t + z)
+            o.issue_t[i] = np.float32(t)
+            o.episode_delay[i] = np.float32(z)
+            heapq.heappush(heap, (t + z, i))
+            misses += 1
+        cnt = o.count[i]
+        gap = np.float32(t) - o.last_access[i]
+        if cnt == 1.0:
+            o.gap_mean[i] = gap
+        elif cnt > 1.0:
+            a_eff = max(1.0 / p.window, 1.0 / max(cnt, 1.0))
+            o.gap_mean[i] = o.gap_mean[i] + a_eff * (gap - o.gap_mean[i])
+        if cnt == 0.0:
+            o.first_access[i] = np.float32(t)
+        o.last_access[i] = np.float32(t)
+        o.count[i] = cnt + 1.0
+        if policy.greedydual and o.cached[i]:
+            o.gd_h[i] = gd_clock + _gd_cost(policy, o, sizes, p)[i]
+        total += lat
+
+    return dict(total_latency=total, n_hits=hits, n_delayed=delayed,
+                n_misses=misses, n_evictions=evictions)

@@ -1,0 +1,62 @@
+"""Trace schema shared by the simulator, generators, and benchmarks."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Trace(NamedTuple):
+    """A request trace over a universe of N objects.
+
+    times   f32[T] — non-decreasing absolute request times (seconds)
+    objs    i32[T] — requested object id per request
+    sizes   f32[N] — object sizes (MB or any consistent capacity unit)
+    z_mean  f32[N] — mean fetch latency per object (the latency model's mean;
+                     the paper uses L + c * size)
+    z_draw  f32[T] — realized fetch duration *if* the request at index k
+                     turns out to be a miss.  Pre-drawing the stochastic
+                     latencies makes every simulation (JAX scan and the
+                     event-driven reference) bit-for-bit reproducible.
+    """
+
+    times: jax.Array
+    objs: jax.Array
+    sizes: jax.Array
+    z_mean: jax.Array
+    z_draw: jax.Array
+
+    @property
+    def n_requests(self) -> int:
+        return self.times.shape[0]
+
+    @property
+    def n_objects(self) -> int:
+        return self.sizes.shape[0]
+
+
+def draw_latencies(key: jax.Array, z_mean_per_req: jax.Array,
+                   stochastic: bool) -> jax.Array:
+    """Realized fetch durations per request index (used only on a miss)."""
+    if not stochastic:
+        return z_mean_per_req
+    e = jax.random.exponential(key, z_mean_per_req.shape, jnp.float32)
+    return z_mean_per_req * e
+
+
+def make_trace(times, objs, sizes, z_mean, key=None, stochastic=True) -> Trace:
+    times = jnp.asarray(times, jnp.float32)
+    objs = jnp.asarray(objs, jnp.int32)
+    sizes = jnp.asarray(sizes, jnp.float32)
+    z_mean = jnp.asarray(z_mean, jnp.float32)
+    per_req = z_mean[objs]
+    if key is None:
+        key = jax.random.key(0)
+    z_draw = draw_latencies(key, per_req, stochastic)
+    return Trace(times, objs, sizes, z_mean, z_draw)
+
+
+def to_numpy(trace: Trace) -> "Trace":
+    return Trace(*(np.asarray(x) for x in trace))

@@ -1,0 +1,105 @@
+"""Trace generators: paper §5.2 synthetic workloads + §5.3 surrogate traces.
+
+Synthetic (§5.2): 100k requests over 100 objects, Zipf popularity, sizes
+uniform [1, 100] MB, miss latency = L + c * size, arrivals Poisson or Pareto.
+
+"Real-world" surrogates (§5.3): the container has no network access, so the
+four traces (Wiki2018/2019, Cloud, YouTube) are replaced by generators
+calibrated to the published shape characteristics in the paper's Fig. 3
+(popularity skew, inter-arrival scale/burstiness, object-size regime).  Real
+traces can be dropped in by constructing a :class:`repro.core.trace.Trace`
+from (times, objs, sizes) directly — the schema is the integration point.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trace import Trace, make_trace
+
+__all__ = ["SyntheticSpec", "zipf_probs", "synthetic_trace",
+           "surrogate_trace", "SURROGATES"]
+
+
+def zipf_probs(n: int, alpha: float) -> jax.Array:
+    """Zipf(alpha) popularity over n ranked objects."""
+    r = jnp.arange(1, n + 1, dtype=jnp.float32)
+    w = r ** (-alpha)
+    return w / w.sum()
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticSpec:
+    n_objects: int = 100
+    n_requests: int = 100_000
+    zipf_alpha: float = 0.9
+    size_min: float = 1.0          # MB
+    size_max: float = 100.0
+    rate: float = 1000.0           # global request rate (req/s)
+    arrival: str = "poisson"       # 'poisson' | 'pareto'
+    pareto_shape: float = 1.5      # heavy-tailed inter-arrivals (mean exists)
+    latency_base: float = 0.005    # L: 5 ms (paper §5.4)
+    latency_per_mb: float = 2e-4   # c: size-proportional component
+    stochastic: bool = True        # Exp-distributed realized fetch latency
+
+
+def _interarrivals(key, spec: SyntheticSpec) -> jax.Array:
+    mean_gap = 1.0 / spec.rate
+    if spec.arrival == "poisson":
+        return jax.random.exponential(key, (spec.n_requests,)) * mean_gap
+    if spec.arrival == "pareto":
+        a = spec.pareto_shape
+        # Pareto(a, x_m) with mean a*x_m/(a-1) == mean_gap.
+        x_m = mean_gap * (a - 1.0) / a
+        u = jax.random.uniform(key, (spec.n_requests,), minval=1e-7, maxval=1.0)
+        return x_m * u ** (-1.0 / a)
+    raise ValueError(f"unknown arrival process {spec.arrival!r}")
+
+
+def synthetic_trace(key: jax.Array, spec: SyntheticSpec = SyntheticSpec()) -> Trace:
+    k_sz, k_obj, k_gap, k_lat = jax.random.split(key, 4)
+    sizes = jnp.floor(jax.random.uniform(
+        k_sz, (spec.n_objects,), minval=spec.size_min,
+        maxval=spec.size_max + 1.0)).astype(jnp.float32)
+    probs = zipf_probs(spec.n_objects, spec.zipf_alpha)
+    objs = jax.random.choice(k_obj, spec.n_objects, (spec.n_requests,), p=probs)
+    times = jnp.cumsum(_interarrivals(k_gap, spec))
+    z_mean = spec.latency_base + spec.latency_per_mb * sizes
+    return make_trace(times, objs, sizes, z_mean, key=k_lat,
+                      stochastic=spec.stochastic)
+
+
+# ---------------------------------------------------------------------------
+# Surrogates for the four real traces (Fig. 3 calibration; see DESIGN.md §4).
+# Capacity in the paper's real-trace runs is 256 GB; we keep the *ratio* of
+# cache size to footprint comparable at reduced universe sizes.
+# ---------------------------------------------------------------------------
+SURROGATES: dict[str, SyntheticSpec] = {
+    # Wiki CDN: strong skew, small-object regime, near-Poisson arrivals.
+    "wiki2018": SyntheticSpec(n_objects=2000, n_requests=200_000,
+                              zipf_alpha=1.05, size_min=0.01, size_max=4.0,
+                              rate=2000.0, arrival="poisson"),
+    "wiki2019": SyntheticSpec(n_objects=2500, n_requests=200_000,
+                              zipf_alpha=0.95, size_min=0.01, size_max=4.0,
+                              rate=2500.0, arrival="poisson"),
+    # Cloud block storage: flatter popularity, fixed-size blocks, bursty.
+    "cloud": SyntheticSpec(n_objects=3000, n_requests=200_000,
+                           zipf_alpha=0.65, size_min=0.5, size_max=2.0,
+                           rate=4000.0, arrival="pareto", pareto_shape=1.3),
+    # YouTube campus: moderate skew, large objects, bursty arrivals.
+    "youtube": SyntheticSpec(n_objects=1500, n_requests=150_000,
+                             zipf_alpha=0.8, size_min=5.0, size_max=200.0,
+                             rate=600.0, arrival="pareto", pareto_shape=1.6),
+}
+
+
+def surrogate_trace(name: str, key: jax.Array | None = None,
+                    **overrides) -> Trace:
+    spec = SURROGATES[name]
+    if overrides:
+        spec = dataclasses.replace(spec, **overrides)
+    if key is None:
+        key = jax.random.key(hash(name) % (2**31))
+    return synthetic_trace(key, spec)

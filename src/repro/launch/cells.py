@@ -1,0 +1,144 @@
+"""Cell builder: (arch x input-shape x mesh) -> step fn + abstract inputs.
+
+A *cell* is one dry-run unit: the jit-able step (train_step / prefill_step /
+decode_step), plus ShapeDtypeStruct stand-ins (weak-type-correct, sharded,
+never allocated) for every input.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.models import transformer as tf
+from repro.sharding import specs
+from repro.sharding.activation import activation_sharding
+from repro.training.optimizer import init_opt
+from repro.training.train_loop import TrainConfig, make_serve_steps, make_train_step
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    name: str
+    fn: Callable
+    args: tuple
+    kind: str
+    donate: tuple = ()   # arg indices donated (params/opt for train, cache for serve)
+
+
+def _with_shardings(abstract: Any, shardings: Any) -> Any:
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        abstract, shardings)
+
+
+def _abstract_params(cfg: ModelConfig, mesh: Mesh, tp: bool = True) -> Any:
+    ap = tf.abstract_params(cfg)
+    return _with_shardings(ap, specs.tree_shardings(mesh, ap, tp=tp))
+
+
+def _abstract_batch(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    tp: bool = True) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch: dict[str, Any] = {"labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.frontend == "none":
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:
+        batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.jdtype)
+    sh = jax.tree.map(lambda sp: NamedSharding(mesh, sp),
+                      specs.batch_specs(mesh, batch, tp=tp),
+                      is_leaf=lambda x: isinstance(x, P))
+    return _with_shardings(batch, sh)
+
+
+def _abstract_cache(cfg: ModelConfig, batch: int, capacity: int,
+                    mesh: Mesh) -> Any:
+    ac = jax.eval_shape(
+        functools.partial(tf.init_cache, cfg, batch, capacity))
+    return _with_shardings(ac, specs.cache_shardings(mesh, ac))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+                tcfg: TrainConfig | None = None,
+                seq_shard: bool | None = None,
+                layout: str = "tp_fsdp") -> Cell:
+    """Build the cell for one (arch, shape) on ``mesh``.
+    layout='fsdp': pure data/FSDP parallelism, no TP (small models)."""
+    shape = SHAPES[shape_name]
+    tcfg = tcfg or TrainConfig()
+    tp = layout != "fsdp"
+    if seq_shard is None:
+        seq_shard = shape.kind == "train" and tp
+    rules = specs.activation_rules(mesh, seq_shard=seq_shard, tp=tp)
+
+    def wrap(fn):
+        @functools.wraps(fn)
+        def inner(*args, **kw):
+            with activation_sharding(mesh, rules):
+                return fn(*args, **kw)
+        return inner
+
+    params = _abstract_params(cfg, mesh, tp=tp)
+    name = f"{cfg.name}@{shape_name}"
+
+    if shape.kind == "train":
+        step = wrap(make_train_step(cfg, tcfg))
+        opt = _opt_shardings(jax.eval_shape(init_opt, params), params, mesh)
+        batch = _abstract_batch(cfg, shape, mesh, tp=tp)
+        return Cell(name, step, (params, opt, batch), "train", donate=(0, 1))
+
+    prefill_step, decode_step = make_serve_steps(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "prefill":
+        capacity = cfg.meta_tokens + s + 1
+        cache = _abstract_cache(cfg, b, capacity, mesh)
+        batch = {}
+        if cfg.frontend == "none":
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        else:
+            batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   cfg.jdtype)
+        sh = jax.tree.map(lambda sp: NamedSharding(mesh, sp),
+                          specs.batch_specs(mesh, batch),
+                          is_leaf=lambda x: isinstance(x, P))
+        batch = _with_shardings(batch, sh)
+        return Cell(name, wrap(prefill_step), (params, cache, batch),
+                    "prefill", donate=(1,))
+
+    # decode: one new token against a cache of seq_len positions.
+    capacity = cfg.meta_tokens + s
+    cache = _abstract_cache(cfg, b, capacity, mesh)
+    pos0 = jax.ShapeDtypeStruct((), jnp.int32)
+    if cfg.frontend == "none":
+        tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        tok = _with_shardings(
+            tok, NamedSharding(mesh, specs.batch_specs(mesh, tok)))
+        fn = wrap(lambda p, c, t, q: decode_step(p, c, tokens=t, pos0=q))
+        return Cell(name, fn, (params, cache, tok, pos0), "decode", donate=(1,))
+    emb = jax.ShapeDtypeStruct((b, 1, cfg.d_model), cfg.jdtype)
+    emb = _with_shardings(
+        emb, NamedSharding(mesh, specs.batch_specs(mesh, emb)))
+    fn = wrap(lambda p, c, e, q: decode_step(p, c, embeds=e, pos0=q))
+    return Cell(name, fn, (params, cache, emb, pos0), "decode", donate=(1,))
+
+
+def _opt_shardings(opt_abs, params, mesh) -> Any:
+    """Optimizer state shards exactly like its parameter (ZeRO-3)."""
+    pshard = jax.tree.map(lambda s: s.sharding, params)
+    master = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        opt_abs.master, pshard)
+    m = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        opt_abs.m, pshard)
+    v = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        opt_abs.v, pshard)
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+    return type(opt_abs)(master, m, v, step)

@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Run one cell:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch grok-1-314b \
+        --shape train_4k --mesh single
+Run everything (each cell in a fresh subprocess for isolation):
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Results land in benchmarks/results/dryrun/<arch>@<shape>@<mesh>.json:
+memory_analysis (per-device bytes), cost_analysis (FLOPs / HBM bytes),
+per-collective wire bytes parsed from the compiled SPMD HLO — the inputs to
+the §Roofline analysis.  NOTE: the XLA_FLAGS line above must execute before
+ANY jax import (jax locks the device count on first init); keep it first —
+which is also why this file has no `from __future__ import annotations`.
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.{0,400}?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.I)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUP_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "u4": 0.5, "s4": 0.5, "f8e4m3fn": 1,
+                "f8e5m2": 1}
+
+
+def _shape_bytes(s):
+    m = _SHAPE_RE.match(s)
+    if not m:
+        return 0.0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def parse_collectives(hlo):
+    """Per-device wire bytes by collective kind.
+
+    SPMD HLO shapes are per-device.  Ring cost model: all-reduce moves
+    2*(g-1)/g of the payload per device, everything else (g-1)/g (all-to-all:
+    (g-1)/g of the local payload leaves the chip)."""
+    totals = {}
+    counts = {}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        lhs, kind = m.group(1), m.group(2).lower()
+        if kind.endswith("-done") or "-done(" in line:
+            continue  # -start carries the payload; don't double count
+        payload = sum(_shape_bytes(f"{dt}[{dims}]")
+                      for dt, dims in _SHAPE_RE.findall(lhs))
+        g = 1
+        gm = _GROUP_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gi = _GROUP_IOTA_RE.search(line)
+            if gi:
+                g = int(gi.group(2))
+        if g <= 1 and kind != "collective-permute":
+            continue
+        if kind == "all-reduce":
+            wire = 2.0 * payload * (g - 1) / g
+        elif kind == "all-gather":
+            wire = payload * (g - 1) / g          # payload = gathered result
+        elif kind == "collective-permute":
+            wire = payload
+        else:                                      # reduce-scatter, all-to-all
+            wire = payload * (g - 1) / max(g, 1)
+        totals[kind] = totals.get(kind, 0.0) + wire
+        counts[kind] = counts.get(kind, 0) + 1
+    totals["total"] = sum(totals.values())
+    return {"wire_bytes": totals, "counts": counts}
+
+
+def _calibrate(cfg, shape, mesh, tcfg):
+    """XLA cost analysis counts while-loop bodies ONCE, so the scanned-layer
+    HLO undercounts FLOPs/bytes/collectives by ~L x.  Compile fully-unrolled
+    L=1 and L=2 variants; per-layer cost = c(2) - c(1), fixed = 2c(1) - c(2),
+    and the full-model cost is fixed + L * per-layer.  (Memory analysis still
+    comes from the production scanned compile.)"""
+    import dataclasses as _dc
+
+    import jax
+    from repro.launch.cells import input_specs as _specs
+
+    out = {"L": cfg.n_layers, "flops": [], "bytes": [], "wire": []}
+    for L in (1, 2):
+        c = _dc.replace(cfg, n_layers=L, scan_layers=False,
+                        gla_unroll=True, attn_unroll=True)
+        cell = _specs(c, shape, mesh, tcfg)
+        comp = jax.jit(cell.fn, donate_argnums=cell.donate).lower(
+            *cell.args).compile()
+        ca = comp.cost_analysis() or {}
+        out["flops"].append(float(ca.get("flops", 0)))
+        out["bytes"].append(float(ca.get("bytes accessed", 0)))
+        out["wire"].append(
+            parse_collectives(comp.as_text())["wire_bytes"]["total"])
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *, seq_shard=None,
+             microbatches: int = 1, remat=None, kv_dtype=None,
+             layout: str = "tp_fsdp", calibrate: bool = True,
+             out_dir: Path = RESULTS, tag: str = "") -> dict:
+    import dataclasses
+
+    import jax
+    from repro.configs import registry
+    from repro.launch.cells import input_specs
+    from repro.launch.mesh import make_production_mesh
+    from repro.training.optimizer import OptConfig
+    from repro.training.train_loop import TrainConfig
+
+    cfg = registry.get(arch)
+    overrides = {}
+    if remat is not None:
+        overrides["remat"] = remat
+    if kv_dtype is not None:
+        overrides["kv_dtype"] = kv_dtype
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    tcfg = TrainConfig(microbatches=microbatches, opt=OptConfig())
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                 "devices": len(jax.devices()), "tag": tag,
+                 "microbatches": microbatches}
+    t0 = time.time()
+    try:
+        with mesh:
+            cell = input_specs(cfg, shape, mesh, tcfg, seq_shard=seq_shard,
+                               layout=layout)
+            lowered = jax.jit(cell.fn, donate_argnums=cell.donate).lower(*cell.args)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_bytes": (ma.argument_size_in_bytes
+                               + ma.output_size_in_bytes
+                               + ma.temp_size_in_bytes
+                               - ma.alias_size_in_bytes),
+            }
+            ca = compiled.cost_analysis() or {}
+            rec["cost"] = {"flops": float(ca.get("flops", -1)),
+                           "bytes": float(ca.get("bytes accessed", -1)),
+                           "transcendentals": float(
+                               ca.get("transcendentals", 0))}
+            hlo = compiled.as_text()
+            rec["collectives"] = parse_collectives(hlo)
+            rec["hlo_bytes"] = len(hlo)
+            if calibrate:
+                rec["calib"] = _calibrate(cfg, shape, mesh, tcfg)
+            rec["ok"] = True
+            print(f"[dryrun] {arch}@{shape}@{mesh_kind}: OK  "
+                  f"peak={rec['memory']['peak_bytes']/2**30:.2f}GiB/dev  "
+                  f"flops/dev={rec['cost']['flops']:.3e}  "
+                  f"coll={rec['collectives']['wire_bytes']['total']/2**20:.1f}MiB")
+            print(f"[dryrun] memory_analysis: {ma}")
+    except Exception as e:  # noqa: BLE001 — recorded, cell marked failed
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        print(f"[dryrun] {arch}@{shape}@{mesh_kind}: FAIL {rec['error'][:200]}")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"@{tag}" if tag else ""
+    path = out_dir / f"{arch}@{shape}@{mesh_kind}{suffix}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def all_cells():
+    from repro.configs import registry
+    from repro.configs.base import shapes_for
+    cells = []
+    for arch, cfg in registry.ARCHS.items():
+        for shape in shapes_for(cfg):
+            for mesh_kind in ("single", "multi"):
+                cells.append((arch, shape, mesh_kind))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--calibrate-only", action="store_true")
+    ap.add_argument("--kv-dtype", default=None, choices=[None, "bf16", "f8"])
+    ap.add_argument("--seq-shard", default="auto",
+                    choices=["auto", "on", "off"])
+    ap.add_argument("--layout", default="tp_fsdp",
+                    choices=["tp_fsdp", "fsdp"])
+    args = ap.parse_args()
+
+    if args.all:
+        cells = all_cells()
+        failures = 0
+        for arch, shape, mesh_kind in cells:
+            path = RESULTS / f"{arch}@{shape}@{mesh_kind}.json"
+            if path.exists() and not args.force:
+                rec = json.loads(path.read_text())
+                if rec.get("ok") and (rec.get("calib")
+                                      or args.no_calibrate):
+                    continue
+                if rec.get("ok") and not rec.get("calib"):
+                    # scanned compile already recorded: only add calibration
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape,
+                           "--mesh", mesh_kind, "--calibrate-only"]
+                    r = subprocess.run(cmd, timeout=args.timeout, check=False)
+                    failures += bool(r.returncode)
+                    continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh_kind]
+            r = subprocess.run(cmd, timeout=args.timeout, check=False)
+            if r.returncode:
+                failures += 1
+        print(f"[dryrun --all] done, {failures} subprocess failures")
+        return 0
+
+    if args.calibrate_only:
+        import dataclasses
+
+        from repro.configs import registry
+        from repro.launch.mesh import make_production_mesh
+        from repro.training.optimizer import OptConfig
+        from repro.training.train_loop import TrainConfig
+
+        path = RESULTS / f"{args.arch}@{args.shape}@{args.mesh}.json"
+        rec = json.loads(path.read_text())
+        cfg = registry.get(args.arch)
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+        tcfg = TrainConfig(microbatches=args.microbatches, opt=OptConfig())
+        with mesh:
+            rec["calib"] = _calibrate(cfg, args.shape, mesh, tcfg)
+        path.write_text(json.dumps(rec, indent=1))
+        print(f"[dryrun] calibrated {args.arch}@{args.shape}@{args.mesh}: "
+              f"{rec['calib']}")
+        return 0
+
+    seq_shard = {"on": True, "off": False}.get(args.seq_shard)
+    rec = run_cell(args.arch, args.shape, args.mesh,
+                   microbatches=args.microbatches, remat=args.remat,
+                   kv_dtype=args.kv_dtype, seq_shard=seq_shard,
+                   layout=args.layout,
+                   calibrate=not args.no_calibrate, tag=args.tag)
+    return 0 if rec.get("ok") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

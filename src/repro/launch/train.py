@@ -1,0 +1,56 @@
+"""Production train driver.
+
+Single-host example (CPU smoke):
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+        --smoke --steps 20
+
+On a real TPU slice the same entry point runs under `jax.distributed` with
+the production mesh; the dry-run (launch/dryrun.py) proves every
+(arch x shape) lowers and compiles on that mesh first.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import registry
+    from repro.data.tokens import DataConfig
+    from repro.training.optimizer import OptConfig
+    from repro.training.train_loop import TrainConfig
+    from repro.training.trainer import RunConfig, Trainer
+
+    cfg = registry.smoke(args.arch) if args.smoke else registry.get(args.arch)
+    if args.smoke:
+        cfg = dataclasses.replace(cfg, remat="none")
+    tcfg = TrainConfig(
+        microbatches=args.microbatches,
+        compress_grads=args.compress_grads,
+        opt=OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                      total_steps=args.steps))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch)
+    rcfg = RunConfig(steps=args.steps, ckpt_every=max(args.steps // 2, 1),
+                     log_every=max(args.steps // 10, 1),
+                     ckpt_dir=args.ckpt_dir)
+    out = Trainer(cfg, tcfg, dcfg, rcfg).run()
+    print(f"[train] done at step {out['final_step']} "
+          f"(preempted={out['preempted']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Shared functional layers (no framework deps — params are plain pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.activation import constrain
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def init_dense(key, d_in: int, d_out: int, dtype=jnp.bfloat16,
+               scale: float | None = None) -> jax.Array:
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def init_embed(key, vocab: int, d: int, dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings.  Half-split convention (LLaMA); applied in f32.
+# ---------------------------------------------------------------------------
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return theta ** (-jnp.arange(0, d_head // 2, dtype=jnp.float32)
+                     / (d_head // 2))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n, d_head); pos: broadcastable to (..., S)."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                      # (d/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs       # (..., S, d/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp_apply(p: dict, x: jax.Array, act: str) -> jax.Array:
+    """Gated ('swiglu'/'geglu') or plain ('gelu'/'relu2') MLP."""
+    if act in ("swiglu", "geglu"):
+        g = x @ p["w_gate"]
+        u = x @ p["w_up"]
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        h = g * u
+    elif act == "gelu":
+        h = jax.nn.gelu(x @ p["w_up"])
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["w_up"]))
+    else:
+        raise ValueError(f"unknown mlp act {act!r}")
+    h = constrain(h, "act_ffn")
+    return h @ p["w_down"]
+
+
+def mlp_init(key, d: int, f: int, act: str, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": init_dense(ks[0], d, f, dtype),
+         "w_down": init_dense(ks[1], f, d, dtype)}
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = init_dense(ks[2], d, f, dtype)
+    return p

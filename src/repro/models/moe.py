@@ -1,0 +1,106 @@
+"""Top-k MoE with group-local capacity dispatch (TPU/GSPMD-friendly).
+
+Tokens are dispatched *within their data-parallel group*: the scatter that
+builds per-expert buffers only permutes tokens that already live on the same
+shard, so GSPMD lowers it to a local scatter + (when experts are sharded over
+the `model` axis) an all-to-all — never a global replication.  Capacity is
+per group (standard capacity-factor semantics; overflow tokens ride the
+residual).  Expert FFNs are plain einsums so the partitioner sees clean dots.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.activation import constrain, dp_group_count
+from .layers import init_dense, mlp_init
+
+
+def init_moe(key, d: int, f: int, n_experts: int, act: str,
+             dtype=jnp.bfloat16) -> dict:
+    kr, ke = jax.random.split(key)
+    expert_keys = jax.random.split(ke, n_experts)
+    experts = jax.vmap(lambda k: mlp_init(k, d, f, act, dtype))(expert_keys)
+    return {"router": init_dense(kr, d, n_experts, jnp.float32),
+            "experts": experts}
+
+
+def _expert_ffn(experts: dict, buf: jax.Array, act: str) -> jax.Array:
+    """buf (G, E, C, d) -> (G, E, C, d) through each expert's own FFN."""
+    if act in ("swiglu", "geglu"):
+        gate = jnp.einsum("gecd,edf->gecf", buf, experts["w_gate"])
+        up = jnp.einsum("gecd,edf->gecf", buf, experts["w_up"])
+        gate = jax.nn.silu(gate) if act == "swiglu" else jax.nn.gelu(gate)
+        h = gate * up
+    elif act == "gelu":
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", buf, experts["w_up"]))
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(
+            jnp.einsum("gecd,edf->gecf", buf, experts["w_up"])))
+    else:
+        raise ValueError(act)
+    h = constrain(h, "moe_ffn")
+    return jnp.einsum("gecf,efd->gecd", h, experts["w_down"])
+
+
+def moe_apply(p: dict, x: jax.Array, *, top_k: int, act: str,
+              capacity_factor: float = 1.25) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B,S,d), aux load-balance loss)."""
+    b, s, d = x.shape
+    e = p["experts"]["w_up"].shape[0]
+    groups = dp_group_count()
+    if b % groups:
+        groups = 1
+    t = b * s
+    tg = t // groups                                 # tokens per group
+    cap = int(max(top_k * tg * capacity_factor / e, 4))
+    xt = x.reshape(groups, tg, d)
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)      # (G, Tg, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux loss (global).
+    me = probs.mean(axis=(0, 1))
+    onehot_e = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # (G,Tg,k,E)
+    ce = onehot_e.mean(axis=(0, 1, 2))
+    aux = e * jnp.sum(me * ce) * top_k
+
+    # Position of each (token, choice) within its expert buffer, per group.
+    flat_e = gate_idx.reshape(groups, tg * top_k)              # (G, Tk)
+    oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)            # (G, Tk, E)
+    pos_in_e = jnp.cumsum(oh, axis=1) - oh
+    flat_pos = jnp.take_along_axis(
+        pos_in_e, flat_e[..., None], axis=2)[..., 0]           # (G, Tk)
+    keep = flat_pos < cap
+    slot = jnp.where(keep, flat_pos, cap - 1)
+
+    # Scatter tokens into (G, E, cap, d) buffers (group-local indices).
+    tok_src = jnp.repeat(jnp.arange(tg), top_k)                # (Tk,)
+    payload = jnp.where(keep[..., None], xt[:, tok_src, :], 0).astype(x.dtype)
+
+    def scatter_group(buf_g, e_g, s_g, pay_g):
+        return buf_g.at[e_g, s_g].add(pay_g)
+
+    buf = jnp.zeros((groups, e, cap, d), x.dtype)
+    buf = jax.vmap(scatter_group)(buf, flat_e, slot, payload)
+    buf = constrain(buf, "moe_experts")
+
+    out_buf = _expert_ffn(p["experts"], buf, act)
+    out_buf = constrain(out_buf, "moe_experts")
+
+    # Gather back per group and combine with gate weights.
+    def gather_group(ob_g, e_g, s_g):
+        return ob_g[e_g, s_g]                                  # (Tk, d)
+
+    picked = jax.vmap(gather_group)(out_buf, flat_e, slot)
+    picked = jnp.where(keep[..., None], picked, 0)
+    w = gate_vals.reshape(groups, tg * top_k, 1).astype(x.dtype)
+
+    def combine_group(pick_g, w_g):
+        return jnp.zeros((tg, d), x.dtype).at[tok_src].add(pick_g * w_g)
+
+    combined = jax.vmap(combine_group)(picked, w)
+    return combined.reshape(b, s, d), aux

@@ -1,0 +1,285 @@
+"""Unified decoder model covering all 10 assigned architectures.
+
+Families:
+  dense / vlm / audio — pre-norm attention + MLP blocks (vlm/audio take
+      precomputed frontend embeddings per the brief's stub rule);
+  moe   — attention + top-k MoE blocks;
+  ssm   — xLSTM mLSTM blocks (self-contained mixers, d_ff = 0);
+  hybrid — Hymba: parallel attention + Mamba heads per block, meta tokens.
+
+Three entry modes share one code path:
+  train   — full sequence, loss over labels;
+  prefill — full sequence, returns last-token logits + serving cache;
+  decode  — one token + cache (KV ring buffer / recurrent state).
+
+Layers are stacked and traversed with ``lax.scan`` (cfg.scan_layers) so the
+314B configs lower to compact HLO; ``jax.checkpoint`` applies the remat
+policy in training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.activation import constrain
+from .attention import attn_apply, init_attn, init_kv_cache
+from .layers import init_embed, mlp_apply, mlp_init, rms_norm
+from .moe import init_moe, moe_apply
+from .ssm import (init_gla_state, init_mamba, init_mlstm, mamba_apply,
+                  mlstm_apply)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_layer(key, cfg: ModelConfig) -> dict:
+    dt = cfg.jdtype
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {"ln1": jnp.ones((d,), dt)}
+    if cfg.family == "ssm":
+        p["mlstm"] = init_mlstm(ks[0], d, cfg.n_heads, cfg.ssm_proj, dtype=dt)
+        return p
+    p["attn"] = init_attn(ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, dt)
+    p["ln2"] = jnp.ones((d,), dt)
+    if cfg.family == "moe":
+        p["moe"] = init_moe(ks[1], d, cfg.d_ff, cfg.n_experts, cfg.mlp_act, dt)
+    else:
+        p["mlp"] = mlp_init(ks[1], d, cfg.d_ff, cfg.mlp_act, dt)
+    if cfg.family == "hybrid":
+        di = int(d * cfg.ssm_proj)
+        p["mamba"] = init_mamba(ks[2], d, di, cfg.ssm_heads, cfg.ssm_state,
+                                dtype=dt)
+        p["b_attn"] = jnp.ones((), jnp.float32)
+        p["b_mamba"] = jnp.ones((), jnp.float32)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dt = cfg.jdtype
+    k_emb, k_layers, k_head, k_meta = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    from .layers import init_dense
+    params = {
+        "embed": init_embed(k_emb, cfg.vocab, cfg.d_model, dt),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": init_dense(k_head, cfg.d_model,
+                              cfg.vocab * cfg.out_heads, dt),
+    }
+    if cfg.meta_tokens:
+        params["meta"] = (jax.random.normal(
+            k_meta, (cfg.meta_tokens, cfg.d_model), jnp.float32) * 0.02
+        ).astype(dt)
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    """ShapeDtypeStruct param tree — no allocation (dry-run path)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg=cfg), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> dict:
+    """Serving cache sized for `capacity` total positions (incl. meta)."""
+    def per_layer(_):
+        c: dict[str, Any] = {}
+        if cfg.family != "ssm":
+            sc = capacity
+            if cfg.sliding_window:
+                sc = min(capacity, cfg.meta_tokens + cfg.sliding_window)
+            c["attn"] = init_kv_cache(batch, sc, cfg.n_kv_heads, cfg.d_head,
+                                      cfg.kv_jdtype)
+        if cfg.family == "ssm":
+            di = int(cfg.d_model * cfg.ssm_proj)
+            dh = di // cfg.n_heads
+            s, n = init_gla_state(batch, cfg.n_heads, dh, dh)
+            c["ssm"] = {"S": s, "n": n,
+                        "conv": jnp.zeros((batch, 3, di), cfg.jdtype)}
+        if cfg.family == "hybrid":
+            di = int(cfg.d_model * cfg.ssm_proj)
+            ph = di // cfg.ssm_heads
+            s, n = init_gla_state(batch, cfg.ssm_heads, cfg.ssm_state, ph)
+            c["ssm"] = {"S": s, "n": n,
+                        "conv": jnp.zeros((batch, 3, di), cfg.jdtype)}
+        return c
+
+    return jax.vmap(per_layer)(jnp.arange(cfg.n_layers))
+
+
+# ---------------------------------------------------------------------------
+# One block
+# ---------------------------------------------------------------------------
+def _block(cfg: ModelConfig, p: dict, x: jax.Array, pos: jax.Array,
+           cache: dict | None, mode: str):
+    aux = jnp.float32(0.0)
+    new_cache: dict[str, Any] = {}
+    h = rms_norm(x, p["ln1"])
+
+    if cfg.family == "ssm":
+        state = conv_tail = None
+        if cache is not None and mode == "decode":
+            state = (cache["ssm"]["S"], cache["ssm"]["n"])
+            conv_tail = cache["ssm"]["conv"]
+        out, (state, conv_tail) = mlstm_apply(
+            p["mlstm"], h, n_heads=cfg.n_heads, state=state,
+            conv_tail=conv_tail, chunk=cfg.gla_chunk, unroll=cfg.gla_unroll,
+            use_kernel=cfg.use_kernel)
+        x = x + out
+        if cache is not None:
+            new_cache["ssm"] = {"S": state[0], "n": state[1],
+                                "conv": conv_tail}
+        return x, new_cache, aux
+
+    attn_cache = cache.get("attn") if cache is not None else None
+    attn_out, attn_cache = attn_apply(
+        p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        d_head=cfg.d_head, pos=pos, theta=cfg.rope_theta,
+        window=cfg.sliding_window, softcap=cfg.logit_softcap,
+        sink=cfg.meta_tokens, cache=attn_cache, use_kernel=cfg.use_kernel,
+        unroll=cfg.attn_unroll)
+    if attn_cache is not None:
+        new_cache["attn"] = attn_cache
+
+    if cfg.family == "hybrid":
+        state = conv_tail = None
+        if cache is not None and mode == "decode":
+            state = (cache["ssm"]["S"], cache["ssm"]["n"])
+            conv_tail = cache["ssm"]["conv"]
+        m_out, (state, conv_tail) = mamba_apply(
+            p["mamba"], h, n_heads=cfg.ssm_heads, d_state=cfg.ssm_state,
+            state=state, conv_tail=conv_tail, chunk=cfg.gla_chunk,
+            unroll=cfg.gla_unroll, use_kernel=cfg.use_kernel)
+        x = (x + p["b_attn"].astype(x.dtype) * attn_out
+             + p["b_mamba"].astype(x.dtype) * m_out)
+        if cache is not None:
+            new_cache["ssm"] = {"S": state[0], "n": state[1],
+                                "conv": conv_tail}
+    else:
+        x = x + attn_out
+    x = constrain(x, "residual")
+
+    h2 = rms_norm(x, p["ln2"])
+    if cfg.family == "moe":
+        mlp_out, aux = moe_apply(p["moe"], h2, top_k=cfg.top_k,
+                                 act=cfg.mlp_act,
+                                 capacity_factor=cfg.capacity_factor)
+    else:
+        mlp_out = mlp_apply(p["mlp"], h2, cfg.mlp_act)
+    x = x + mlp_out
+    x = constrain(x, "residual")
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def forward(params: dict, cfg: ModelConfig, *, tokens=None, embeds=None,
+            cache=None, pos0=0, mode: str = "train"):
+    """Returns (logits, new_cache, aux_loss).
+
+    tokens (B,S) int32 or embeds (B,S,d) (vlm/audio stubs); decode: S == 1
+    and ``pos0`` is the absolute position of the incoming token (including
+    the meta-token offset for hybrid archs).
+    """
+    assert mode in ("train", "prefill", "decode")
+    x = params["embed"][tokens] if embeds is None else embeds.astype(cfg.jdtype)
+    b, s = x.shape[0], x.shape[1]
+    m = cfg.meta_tokens
+    if m and mode != "decode":
+        meta = jnp.broadcast_to(params["meta"], (b, m, cfg.d_model))
+        x = jnp.concatenate([meta.astype(x.dtype), x], axis=1)
+        s = s + m
+    x = constrain(x, "residual")
+
+    if mode == "decode":
+        pos = jnp.asarray(pos0, jnp.int32).reshape(1)
+    else:
+        pos = jnp.arange(s, dtype=jnp.int32)
+
+    block = functools.partial(_block, cfg, mode=mode)
+    if mode == "train" and cfg.remat != "none":
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if cfg.remat == "full"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        block = jax.checkpoint(block, policy=policy, static_argnums=())
+
+    if cfg.scan_layers:
+        def body(carry, xs):
+            h, aux = carry
+            p_l, cache_l = xs
+            h, new_c, a = block(p_l, h, pos, cache_l)
+            return (h, aux + a), new_c
+
+        (x, aux), new_cache = jax.lax.scan(
+            body, (x, jnp.float32(0.0)),
+            (params["layers"], cache))
+    else:
+        aux = jnp.float32(0.0)
+        new_layers = []
+        for l in range(cfg.n_layers):
+            p_l = jax.tree.map(lambda a: a[l], params["layers"])
+            c_l = jax.tree.map(lambda a: a[l], cache) if cache is not None else None
+            x, new_c, a = block(p_l, x, pos, c_l)
+            aux += a
+            new_layers.append(new_c)
+        new_cache = (jax.tree.map(lambda *xs: jnp.stack(xs), *new_layers)
+                     if cache is not None else None)
+
+    x = rms_norm(x, params["final_norm"])
+    if mode == "train":
+        if m:
+            x = x[:, m:]
+    elif mode == "prefill":
+        x = x[:, -1:]
+    logits = x @ params["lm_head"]
+    if cfg.out_heads > 1:
+        logits = logits.reshape(*logits.shape[:-1], cfg.out_heads, cfg.vocab)
+    logits = constrain(logits, "logits")
+    return logits, new_cache, aux
+
+
+def _block_wrapper_sig_note():
+    """(kept for docs) block(p, x, pos, cache, mode) -> (x, cache, aux)."""
+
+
+# ---------------------------------------------------------------------------
+# Losses / steps (model-level; the distributed step lives in training/)
+# ---------------------------------------------------------------------------
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore: int = -100) -> jax.Array:
+    """Stable CE in f32; supports (B,S,V) and (B,S,K,V) multi-head logits.
+
+    The label pick uses a one-hot contraction rather than take_along_axis so
+    a vocab-sharded (TP) logits tensor reduces locally + psum instead of
+    all-gathering the full vocab axis (GSPMD-friendly)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    valid = labels != ignore
+    safe = jnp.where(valid, labels, 0)
+    onehot = jax.nn.one_hot(safe, logits.shape[-1], dtype=logits.dtype)
+    picked = jnp.einsum("...v,...v->...", lf, onehot)
+    nll = jnp.where(valid, lse - picked, 0.0)
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict,
+            aux_coef: float = 0.01) -> tuple[jax.Array, dict]:
+    logits, _, aux = forward(
+        params, cfg, tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+        mode="train")
+    labels = batch["labels"]
+    if cfg.out_heads > 1 and labels.ndim == 2:
+        labels = jnp.broadcast_to(labels[..., None],
+                                  (*labels.shape, cfg.out_heads))
+    ce = cross_entropy(logits, labels)
+    loss = ce + aux_coef * aux
+    return loss, {"ce": ce, "aux": aux}

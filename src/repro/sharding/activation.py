@@ -1,0 +1,76 @@
+"""Activation sharding constraints, decoupled from model code.
+
+Model code calls ``constrain(x, "<logical name>")``; the mapping from logical
+activation names to mesh ``PartitionSpec``s is installed by the launcher (or
+left empty — then ``constrain`` is the identity, which is what unit tests and
+single-device smoke runs use).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules() -> dict | None:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, rules: dict[str, P]):
+    """Install logical-activation sharding rules for the enclosed trace."""
+    prev = (current_mesh(), current_rules())
+    _state.mesh, _state.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def dp_group_count() -> int:
+    """Number of data-parallel shards in the installed mesh (1 if none).
+    Model code uses this to make data-dependent dispatch (MoE scatter)
+    group-local so GSPMD can keep it shard-resident."""
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    n = 1
+    for a in ("pod", "data"):
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def axis_size(name: str) -> int:
+    mesh = current_mesh()
+    return 1 if mesh is None else mesh.shape.get(name, 1)
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    """Apply the installed PartitionSpec for logical activation ``name``."""
+    mesh, rules = current_mesh(), current_rules()
+    if mesh is None or rules is None or name not in rules:
+        return x
+    spec = rules[name]
+    # Drop spec axes that don't fit the rank or divisibility of x.
+    if len(spec) > x.ndim:
+        spec = P(*spec[: x.ndim])
+    fixed = []
+    for dim, axis in enumerate(spec):
+        if axis is None:
+            fixed.append(None)
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        fixed.append(axis if x.shape[dim] % total == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))

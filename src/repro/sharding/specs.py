@@ -1,0 +1,215 @@
+"""Parameter / input PartitionSpec inference.
+
+Strategy (DESIGN.md §6): tensor parallelism over the ``model`` axis for the
+contracting/output feature dims (Megatron col->row pairs), FSDP (ZeRO-3) over
+(``pod``, ``data``) for whatever large dim remains, expert parallelism over
+``model`` when the expert count divides it.  Every rule is divisibility-
+checked against the actual shape; non-divisible dims fall back down a
+preference list, ending at replication — this is what lets one rule set
+cover all 10 architectures (vocab 32001, 25 heads, etc.).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+TP = "model"
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def best_spec(mesh: Mesh, shape: Sequence[int],
+              prefs: Sequence[Sequence[tuple[int, Any]]]) -> P:
+    """Greedy first-fit: ``prefs`` is a list of preference chains, one per
+    logical role; each chain is [(dim, axes), ...] tried in order.  A (dim,
+    axes) binds iff the dim is unbound, the axes are unused, and the shape
+    divides."""
+    bound: dict[int, Any] = {}
+    used: set = set()
+    for chain in prefs:
+        for dim, axes in chain:
+            if dim >= len(shape) or dim in bound:
+                continue
+            alist = axes if isinstance(axes, tuple) else (axes,)
+            if any(a in used for a in alist):
+                continue
+            if shape[dim] % _size(mesh, axes) == 0 and shape[dim] > 0:
+                bound[dim] = axes
+                used.update(alist)
+                break
+    return P(*[bound.get(i) for i in range(len(shape))])
+
+
+def param_spec(mesh: Mesh, path: str, shape: Sequence[int],
+               fsdp: bool = True, tp: bool = True) -> P:
+    """PartitionSpec for one parameter. ``path`` is a '/'-joined key path;
+    stacked layer params carry a leading L dim (never sharded).
+
+    tp=False: pure-FSDP layout — every tensor shards over ALL mesh axes
+    (data+model treated as one big DP/FSDP axis); no tensor parallelism.
+    Preferred for small-d models where TP shards are skinnier than the MXU
+    tile (§Perf hillclimb cell C)."""
+    fa = dp_axes(mesh)
+    if not tp:
+        fa = fa + (TP,)
+    if not fsdp:
+        fa = ()
+    name = path.split("/")[-1]
+    stacked = "/layers/" in f"/{path}/"
+    off = 1 if stacked else 0
+    nd = len(shape)
+
+    def S(*prefs):
+        if not tp:
+            # strip TP bindings; widen FSDP chains over the fused axis
+            prefs = [[(d, a) for (d, a) in chain if a != TP]
+                     for chain in prefs]
+            prefs = [c for c in prefs if c]
+        return best_spec(mesh, shape, prefs)
+
+    # --- 1-D / small tensors: replicate (norms, scalars, a_log, d_skip) ---
+    if nd - off <= 1:
+        return P(*([None] * nd))
+
+    d_in, d_out = off + 0, off + 1
+
+    if name in ("embed",):                       # (V, d)
+        return S([(0, TP)], [(1, fa)])
+    if name in ("lm_head",):                     # (d, V*out_heads)
+        return S([(1, TP)], [(0, fa)])
+    if name in ("meta",):
+        return P(*([None] * nd))
+    # MoE experts first (their leaf names shadow the dense MLP rules):
+    # (L, E, d, f) / (L, E, f, d) — EP over the TP axis when E divides it,
+    # else TP on the ff dim; FSDP on the remaining feature dim.
+    if "/experts/" in f"/{path}/":
+        e_dim = off
+        if name in ("w_gate", "w_up"):
+            return S([(e_dim, TP), (off + 2, TP)], [(off + 1, fa)],
+                     [(off + 2, fa)])
+        return S([(e_dim, TP), (off + 1, TP)], [(off + 2, fa)],
+                 [(off + 1, fa)])
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_bc"):
+        # column-parallel: (d_in, d_out) -> TP on out, FSDP on in
+        return S([(d_out, TP)], [(d_in, fa)])
+    if name in ("wo", "w_down", "w_out"):
+        # row-parallel: TP on in, FSDP on out
+        return S([(d_in, TP)], [(d_out, fa)])
+    if name in ("w_gates", "w_dt", "router"):
+        return S([(d_in, fa)])
+    if name == "conv":                           # (K, channels)
+        return S([(off + 1, TP)])
+    # Fallback: FSDP the largest divisible dim.
+    order = sorted(range(off, nd), key=lambda i: -shape[i])
+    return S([(i, fa) for i in order])
+
+
+def tree_specs(mesh: Mesh, tree: Any, fsdp: bool = True,
+               tp: bool = True) -> Any:
+    """Map a parameter pytree to PartitionSpecs (path-aware)."""
+    def walk(path, node):
+        if isinstance(node, dict):
+            return {k: walk(f"{path}/{k}", v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = type(node)
+            return t(walk(f"{path}/{i}", v) for i, v in enumerate(node))
+        return param_spec(mesh, path, node.shape, fsdp, tp)
+
+    return walk("", tree)
+
+
+def tree_shardings(mesh: Mesh, tree: Any, fsdp: bool = True,
+                   tp: bool = True) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_specs(mesh, tree, fsdp, tp),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activation rules installed by the launcher (see sharding/activation.py).
+# ---------------------------------------------------------------------------
+def activation_rules(mesh: Mesh, *, seq_shard: bool = False,
+                     tp: bool = True) -> dict:
+    """Logical-activation name -> PartitionSpec.
+
+    seq_shard=True additionally shards the sequence dim of the residual
+    stream over the TP axis (Megatron sequence parallelism) — a §Perf lever
+    that divides layer-boundary activation memory by the TP degree."""
+    dp = dp_axes(mesh)
+    if not tp:
+        dp = dp + (TP,)
+        return {"residual": P(dp, None, None), "logits": P(dp, None, None)}
+    rules = {
+        "residual": P(dp, TP, None) if seq_shard else P(dp, None, None),
+        "act_ffn": P(dp, None, TP),
+        "act_heads": P(dp, None, TP, None),
+        "logits": P(dp, None, TP),
+        # MoE buffers are (G, E, cap, d): groups over DP, experts over TP
+        # (constrain() drops the TP binding when E doesn't divide it; the
+        # E-indivisible case then follows the TP-sharded ff dim of the
+        # expert weights via propagation).
+        "moe_experts": P(dp, TP, None, None),
+    }
+    return rules
+
+
+def batch_specs(mesh: Mesh, batch: Any, tp: bool = True) -> Any:
+    """Shard every batch leaf's leading (batch) dim over the DP axes
+    (all axes under the pure-FSDP layout)."""
+    dp = dp_axes(mesh)
+    if not tp:
+        dp = dp + (TP,)
+
+    def one(x):
+        shape = x.shape
+        if len(shape) == 0:
+            return P()
+        if shape[0] % _size(mesh, dp) == 0:
+            return P(dp, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree.map(one, batch)
+
+
+def cache_spec(mesh: Mesh, path: str, shape: Sequence[int]) -> P:
+    """KV / recurrent-state cache sharding: batch over DP, then heads or
+    feature dims over TP, divisibility-checked."""
+    dp = dp_axes(mesh)
+    name = path.split("/")[-1]
+    nd = len(shape)
+    if name == "kpos":
+        return P(*([None] * nd))
+    if name in ("k", "v"):        # (L, B, Sc, KV, dh)
+        return best_spec(mesh, shape,
+                         [[(1, dp)], [(3, TP), (4, TP)]])
+    if name == "S":               # (L, B, H, dk, dv)
+        return best_spec(mesh, shape, [[(1, dp)], [(3, TP), (4, TP), (2, TP)]])
+    if name == "n":               # (L, B, H, dk)
+        return best_spec(mesh, shape, [[(1, dp)], [(3, TP), (2, TP)]])
+    if name == "conv":            # (L, B, K-1, di)
+        return best_spec(mesh, shape, [[(1, dp)], [(3, TP)]])
+    order = sorted(range(1, nd), key=lambda i: -shape[i])
+    return best_spec(mesh, shape, [[(1, dp)]] + [[(i, TP)] for i in order])
+
+
+def cache_shardings(mesh: Mesh, cache: Any) -> Any:
+    def walk(path, node):
+        if isinstance(node, dict):
+            return {k: walk(f"{path}/{k}", v) for k, v in node.items()}
+        return NamedSharding(mesh, cache_spec(mesh, path, node.shape))
+
+    return walk("", cache)

@@ -1,0 +1,160 @@
+"""Fault-tolerant sharded checkpointing (no external deps).
+
+Layout:
+    <dir>/step_<N>.tmp/            # written first
+        manifest.json              # tree structure, shapes, dtypes, specs
+        arr_<k>.npy                # one file per leaf (per-host shard in
+                                   # multi-process deployments)
+    <dir>/step_<N>/                # atomic rename on completion
+    <dir>/LATEST                   # text file, updated last
+
+Restore is *elastic*: leaves are device_put against the CURRENT mesh's
+shardings (which may have a different shape/axis layout than at save time),
+so a 512-chip checkpoint restores onto 256 chips and vice versa — resharding
+is just a device_put.  Async saves run on a daemon thread; `wait()` joins
+before the next save or exit (preemption handler calls save(..., block=True)).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't serialize ml_dtypes (bfloat16, fp8) natively — store the raw
+# bits under a same-width integer view and record the logical dtype.
+_VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8}
+_VIEW_BACK = {"bfloat16": ml_dtypes.bfloat16,
+              "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+              "float8_e5m2": ml_dtypes.float8_e5m2}
+
+
+def _flatten(tree: Any, prefix="") -> dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}/{k}"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}/{i}"))
+    elif hasattr(tree, "_fields"):              # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}/{k}"))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def _unflatten_into(template: Any, flat: dict[str, Any], prefix="") -> Any:
+    if isinstance(template, dict):
+        return {k: _unflatten_into(v, flat, f"{prefix}/{k}")
+                for k, v in template.items()}
+    if hasattr(template, "_fields"):
+        return type(template)(*(
+            _unflatten_into(getattr(template, k), flat, f"{prefix}/{k}")
+            for k in template._fields))
+    if isinstance(template, (list, tuple)):
+        return type(template)(
+            _unflatten_into(v, flat, f"{prefix}/{i}")
+            for i, v in enumerate(template))
+    return flat[prefix]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | os.PathLike, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, block: bool = False) -> None:
+        """Snapshot to host then write async (double-buffer semantics: the
+        device arrays are free to be donated right after this returns)."""
+        self.wait()
+        flat = _flatten(tree)
+        host = {k: np.asarray(v) for k, v in flat.items()}
+
+        def write():
+            tmp = self.dir / f"step_{step}.tmp"
+            final = self.dir / f"step_{step}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            manifest = {}
+            for i, (k, v) in enumerate(sorted(host.items())):
+                fn = f"arr_{i}.npy"
+                logical = str(v.dtype)
+                if logical in _VIEW_AS:
+                    v = v.view(_VIEW_AS[logical])
+                np.save(tmp / fn, v)
+                manifest[k] = {"file": fn, "shape": list(v.shape),
+                               "dtype": logical}
+            (tmp / "manifest.json").write_text(json.dumps(
+                {"step": step, "leaves": manifest}))
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)
+            (self.dir / "LATEST.tmp").write_text(str(step))
+            (self.dir / "LATEST.tmp").rename(self.dir / "LATEST")
+            self._gc()
+
+        if block:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def steps(self) -> list[int]:
+        return [int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+                if p.is_dir() and not p.name.endswith(".tmp")]
+
+    def latest_step(self) -> int | None:
+        f = self.dir / "LATEST"
+        if not f.exists():
+            steps = self.steps()
+            return max(steps) if steps else None
+        s = int(f.read_text().strip())
+        return s if (self.dir / f"step_{s}").exists() else None
+
+    def restore(self, step: int, template: Any,
+                shardings: Any | None = None) -> Any:
+        """Load into the structure of ``template``; if ``shardings`` is given
+        (pytree of NamedSharding matching template) leaves are device_put
+        against the *current* mesh — elastic resharding."""
+        d = self.dir / f"step_{step}"
+        manifest = json.loads((d / "manifest.json").read_text())["leaves"]
+        flat_t = _flatten(template)
+        flat_s = _flatten(shardings) if shardings is not None else {}
+        flat = {}
+        for k, t in flat_t.items():
+            meta = manifest[k]
+            arr = np.load(d / meta["file"])
+            if meta["dtype"] in _VIEW_BACK:
+                arr = arr.view(_VIEW_BACK[meta["dtype"]])
+            want = getattr(t, "shape", None)
+            if want is not None and tuple(arr.shape) != tuple(want):
+                raise ValueError(f"shape mismatch for {k}: "
+                                 f"{arr.shape} vs {want}")
+            sh = flat_s.get(k)
+            flat[k] = (jax.device_put(arr, sh) if sh is not None
+                       else jax.device_put(arr))
+        return _unflatten_into(template, flat)

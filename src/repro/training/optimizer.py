@@ -1,0 +1,95 @@
+"""AdamW with fp32 master weights, global-norm clipping, cosine schedule.
+
+Hand-rolled (no optax in the container).  Optimizer state is a pytree shaped
+like the params, so the FSDP parameter shardings apply verbatim — ZeRO-3:
+master/m/v live fully sharded, the bf16 working copy is what the forward
+all-gathers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    master: Any      # fp32 params
+    m: Any           # fp32 first moment
+    v: Any           # fp32 second moment
+    step: jax.Array  # i32 scalar
+
+
+def init_opt(params: Any) -> OptState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((s - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def apply_updates(params: Any, grads: Any, opt: OptState,
+                  cfg: OptConfig) -> tuple[Any, OptState, dict]:
+    """One AdamW step; returns (bf16 params, new state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = opt.step + 1
+    lr = schedule(cfg, step)
+    b1t = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1t
+        vh = v / b2t
+        # no weight decay on 1-D tensors (norms, biases, gates)
+        wd = cfg.weight_decay if master.ndim > 1 else 0.0
+        master = master - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + wd * master)
+        return m, v, master, master.astype(p.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(opt.m)
+    flat_v = jax.tree.leaves(opt.v)
+    flat_ma = jax.tree.leaves(opt.master)
+    flat_p = jax.tree.leaves(params)
+    out = [upd(*args) for args in zip(flat_g, flat_m, flat_v, flat_ma, flat_p)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_ma = treedef.unflatten([o[2] for o in out])
+    new_p = treedef.unflatten([o[3] for o in out])
+    return new_p, OptState(new_ma, new_m, new_v, step), {
+        "grad_norm": gnorm, "lr": lr}

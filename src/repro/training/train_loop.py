@@ -1,0 +1,96 @@
+"""Distributed train/serve step factories.
+
+``make_train_step`` builds the jit-able update: microbatched gradient
+accumulation (lax.scan), loss in f32, AdamW, optional int8-compressed
+cross-pod gradient reduction.  ``make_serve_steps`` builds prefill/decode.
+Both are pure functions of (params/opt/cache, batch) — the launcher decides
+shardings; the preemption-safe outer loop lives in :mod:`trainer`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from .optimizer import OptConfig, OptState, apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    aux_coef: float = 0.01
+    opt: OptConfig = OptConfig()
+    compress_grads: bool = False   # int8 cross-pod DP reduction (compression.py)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics).  ``batch`` leaves have leading dim
+    global_batch; with microbatching the loss/grads are averaged across
+    ``tcfg.microbatches`` sequential slices (memory lever)."""
+
+    def loss(params, mb):
+        return tf.loss_fn(params, cfg, mb, aux_coef=tcfg.aux_coef)
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def train_step(params, opt_state: OptState, batch: dict):
+        nm = tcfg.microbatches
+        if nm == 1:
+            (l, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                return x.reshape(nm, x.shape[0] // nm, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            (grads, l), _ = jax.lax.scan(
+                acc, (zeros, jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(lambda g: g / nm, grads)
+            l = l / nm
+            metrics = {"ce": l, "aux": jnp.float32(0.0)}
+        if tcfg.compress_grads:
+            from .compression import compress_pod_reduce
+            grads = compress_pod_reduce(grads)
+        params, opt_state, om = apply_updates(params, grads, opt_state,
+                                              tcfg.opt)
+        metrics = dict(metrics, loss=l, **om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_steps(cfg: ModelConfig):
+    """Returns (prefill_step, decode_step).
+
+    prefill_step(params, cache, batch)        -> (last_logits, cache)
+    decode_step(params, cache, tokens, pos0)  -> (logits, cache)
+    """
+
+    def prefill_step(params, cache, batch: dict):
+        logits, cache, _ = tf.forward(
+            params, cfg, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"), cache=cache, mode="prefill")
+        return logits, cache
+
+    def decode_step(params, cache, tokens=None, embeds=None, pos0=0):
+        logits, cache, _ = tf.forward(
+            params, cfg, tokens=tokens, embeds=embeds, cache=cache,
+            pos0=pos0, mode="decode")
+        return logits, cache
+
+    return prefill_step, decode_step

@@ -1,0 +1,57 @@
+"""Validate Theorem 1 / Theorem 2 analytic moments against Monte Carlo."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import delay_stats as ds
+
+CASES = [
+    # (lambda, z) — spanning light to heavy delayed-hit regimes
+    (0.1, 0.5),
+    (1.0, 1.0),
+    (5.0, 0.3),
+    (20.0, 0.1),
+    (2.0, 4.0),
+]
+
+
+@pytest.mark.parametrize("lam,z", CASES)
+def test_theorem2_mean(lam, z):
+    key = jax.random.key(42)
+    m, _ = ds.mc_moments(key, lam, z, n=400_000, stochastic=True)
+    analytic = ds.stoch_mean(lam, z)
+    np.testing.assert_allclose(m, analytic, rtol=0.02)
+
+
+@pytest.mark.parametrize("lam,z", CASES)
+def test_theorem2_variance(lam, z):
+    key = jax.random.key(7)
+    _, v = ds.mc_moments(key, lam, z, n=400_000, stochastic=True)
+    analytic = ds.stoch_var(lam, z)
+    np.testing.assert_allclose(v, analytic, rtol=0.06)
+
+
+@pytest.mark.parametrize("lam,z", CASES)
+def test_theorem1_mean_and_var(lam, z):
+    key = jax.random.key(3)
+    m, v = ds.mc_moments(key, lam, z, n=400_000, stochastic=False)
+    np.testing.assert_allclose(m, ds.det_mean(lam, z), rtol=0.02)
+    np.testing.assert_allclose(v, ds.det_var(lam, z), rtol=0.06)
+
+
+def test_stochastic_moments_dominate_deterministic():
+    """Randomness in Z strictly increases both mean and variance (Remark 3)."""
+    lam = jnp.linspace(0.1, 20.0, 16)
+    z = jnp.linspace(0.05, 4.0, 16)
+    assert bool(jnp.all(ds.stoch_mean(lam, z) >= ds.det_mean(lam, z)))
+    assert bool(jnp.all(ds.stoch_var(lam, z) >= ds.det_var(lam, z)))
+
+
+def test_zero_rate_reduces_to_fetch_latency():
+    """With no delayed hits (lambda=0): D = Z, so E=z, Var=z^2 (Exp)."""
+    z = 0.7
+    np.testing.assert_allclose(ds.stoch_mean(0.0, z), z, rtol=1e-6)
+    np.testing.assert_allclose(ds.stoch_var(0.0, z), z * z, rtol=1e-6)
+    np.testing.assert_allclose(ds.det_mean(0.0, z), z, rtol=1e-6)
+    np.testing.assert_allclose(ds.det_var(0.0, z), 0.0, atol=1e-9)

@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests (reduced configs, CPU).
+
+For every assigned arch: one train step (loss finite, grads finite, output
+shapes right) and prefill->decode consistency (decode of token s must match
+the full-sequence forward's logits at position s)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import transformer as tf
+
+ARCHS = list(registry.ARCHS)
+
+
+def _batch(cfg, key, b=2, s=32):
+    kt, kl, ke = jax.random.split(key, 3)
+    batch = {"labels": jax.random.randint(kl, (b, s), 0, cfg.vocab)}
+    if cfg.frontend == "none":
+        batch["tokens"] = jax.random.randint(kt, (b, s), 0, cfg.vocab)
+    else:
+        batch["embeds"] = jax.random.normal(ke, (b, s, cfg.d_model),
+                                            jnp.float32) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_shapes_and_finite(arch):
+    cfg = registry.smoke(arch)
+    key = jax.random.key(0)
+    params = tf.init_params(key, cfg)
+    batch = _batch(cfg, key)
+    (loss, metrics), grads = jax.value_and_grad(
+        tf.loss_fn, has_aux=True)(params, cfg, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    assert np.isfinite(float(metrics["ce"]))
+    leaf_ok = jax.tree.map(lambda g: bool(jnp.all(jnp.isfinite(g))), grads)
+    assert all(jax.tree.leaves(leaf_ok)), f"{arch}: non-finite grads"
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert float(gnorm) > 0.0, f"{arch}: zero gradient"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_logits_shape(arch):
+    cfg = registry.smoke(arch)
+    params = tf.init_params(jax.random.key(1), cfg)
+    b, s = 2, 32
+    batch = _batch(cfg, jax.random.key(2), b, s)
+    logits, _, _ = tf.forward(params, cfg, tokens=batch.get("tokens"),
+                              embeds=batch.get("embeds"), mode="train")
+    want = ((b, s, cfg.out_heads, cfg.vocab) if cfg.out_heads > 1
+            else (b, s, cfg.vocab))
+    assert logits.shape == want, (arch, logits.shape, want)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode_matches_full_forward(arch):
+    cfg = registry.smoke(arch)
+    params = tf.init_params(jax.random.key(3), cfg)
+    b, s = 2, 16
+    batch = _batch(cfg, jax.random.key(4), b, s + 1)
+    toks, embs = batch.get("tokens"), batch.get("embeds")
+
+    full, _, _ = tf.forward(params, cfg,
+                            tokens=toks, embeds=embs, mode="train")
+
+    cache = tf.init_cache(cfg, b, capacity=cfg.meta_tokens + s + 1)
+    _, cache, _ = tf.forward(
+        params, cfg,
+        tokens=None if toks is None else toks[:, :s],
+        embeds=None if embs is None else embs[:, :s],
+        cache=cache, mode="prefill")
+    pos0 = cfg.meta_tokens + s
+    dec, _, _ = tf.forward(
+        params, cfg,
+        tokens=None if toks is None else toks[:, s:s + 1],
+        embeds=None if embs is None else embs[:, s:s + 1],
+        cache=cache, pos0=pos0, mode="decode")
+
+    got = np.asarray(dec[:, 0].astype(jnp.float32))
+    want = np.asarray(full[:, s].astype(jnp.float32))
+    np.testing.assert_allclose(got, want, atol=0.06, rtol=0.05)
+
+
+@pytest.mark.parametrize("arch", ["starcoder2-15b", "hymba-1.5b"])
+def test_sliding_window_decode_ring_buffer(arch):
+    """Decode far past the window: ring buffer must keep exactness vs a
+    full-forward reference restricted to the same window."""
+    cfg = registry.smoke(arch)
+    assert cfg.sliding_window > 0
+    b = 1
+    total = cfg.meta_tokens + cfg.sliding_window * 2 + 7
+    s_text = total - cfg.meta_tokens
+    key = jax.random.key(5)
+    params = tf.init_params(key, cfg)
+    toks = jax.random.randint(key, (b, s_text + 1), 0, cfg.vocab)
+
+    full, _, _ = tf.forward(params, cfg, tokens=toks, mode="train")
+
+    cache = tf.init_cache(cfg, b, capacity=total + 1)
+    _, cache, _ = tf.forward(params, cfg, tokens=toks[:, :s_text],
+                             cache=cache, mode="prefill")
+    dec, _, _ = tf.forward(params, cfg, tokens=toks[:, s_text:s_text + 1],
+                           cache=cache, pos0=cfg.meta_tokens + s_text,
+                           mode="decode")
+    np.testing.assert_allclose(
+        np.asarray(dec[:, 0].astype(jnp.float32)),
+        np.asarray(full[:, s_text].astype(jnp.float32)),
+        atol=0.06, rtol=0.05)
+
+
+def test_param_count_formula_matches_init():
+    for arch in ARCHS:
+        cfg = registry.smoke(arch)
+        params = tf.init_params(jax.random.key(0), cfg)
+        n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+        assert n == cfg.n_params(), (arch, n, cfg.n_params())
+
+
+def test_fp8_kv_cache_decode_close_to_bf16():
+    """fp8 KV cache (§Perf decode lever): decode logits stay close to the
+    bf16-cache reference on the smoke model."""
+    import dataclasses
+    cfg = registry.smoke("deepseek-coder-33b")
+    params = tf.init_params(jax.random.key(7), cfg)
+    b, s = 1, 24
+    toks = jax.random.randint(jax.random.key(8), (b, s + 1), 0, cfg.vocab)
+
+    outs = {}
+    for kvd in ("bf16", "f8"):
+        c = dataclasses.replace(cfg, kv_dtype=kvd)
+        cache = tf.init_cache(c, b, capacity=s + 1)
+        _, cache, _ = tf.forward(params, c, tokens=toks[:, :s], cache=cache,
+                                 mode="prefill")
+        dec, _, _ = tf.forward(params, c, tokens=toks[:, s:s + 1],
+                               cache=cache, pos0=s, mode="decode")
+        outs[kvd] = np.asarray(dec[:, 0].astype(jnp.float32))
+    # fp8 e4m3 has ~2 decimal digits; logits should still agree coarsely
+    np.testing.assert_allclose(outs["f8"], outs["bf16"], atol=0.35, rtol=0.3)
+    # and argmax (greedy token) should usually match on a smoke model
+    assert (np.argmax(outs["f8"], -1) == np.argmax(outs["bf16"], -1)).mean() \
+        >= 0.99

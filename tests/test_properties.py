@@ -1,0 +1,138 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PolicyParams, delay_stats as ds, simulate
+from repro.core.trace import make_trace
+
+_settings = dict(deadline=None, max_examples=25)
+
+
+@given(lam=st.floats(0.0, 50.0), z=st.floats(1e-3, 5.0))
+@settings(**_settings)
+def test_theorem2_moments_positive_and_dominate_theorem1(lam, z):
+    m1, v1 = float(ds.det_mean(lam, z)), float(ds.det_var(lam, z))
+    m2, v2 = float(ds.stoch_mean(lam, z)), float(ds.stoch_var(lam, z))
+    assert m2 >= m1 >= z * (1 - 1e-6)
+    assert v2 >= v1 >= 0.0
+    # Var under Exp latency is at least the latency's own variance z^2
+    assert v2 >= z * z * (1 - 1e-6)
+
+
+@given(lam=st.floats(1e-3, 20.0), z=st.floats(1e-3, 2.0),
+       scale=st.floats(1.1, 4.0))
+@settings(**_settings)
+def test_ranking_monotone_in_latency(lam, z, scale):
+    """eq.16 numerator must increase with mean latency (keep slower-to-fetch
+    objects, all else equal)."""
+    f1 = float(ds.stoch_mean(lam, z) + ds.stoch_std(lam, z))
+    f2 = float(ds.stoch_mean(lam, z * scale) + ds.stoch_std(lam, z * scale))
+    assert f2 > f1
+
+
+@st.composite
+def small_trace(draw):
+    n_obj = draw(st.integers(2, 12))
+    n_req = draw(st.integers(20, 120))
+    seed = draw(st.integers(0, 2**16))
+    key = jax.random.key(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    times = jnp.cumsum(jax.random.exponential(k1, (n_req,)) * 0.01)
+    objs = jax.random.randint(k2, (n_req,), 0, n_obj)
+    sizes = jax.random.uniform(k3, (n_obj,), minval=1.0, maxval=5.0)
+    z_mean = jnp.full((n_obj,), 0.05)
+    stochastic = draw(st.booleans())
+    return make_trace(times, objs, sizes, z_mean, key=k3,
+                      stochastic=stochastic), n_obj
+
+
+@given(tr=small_trace(),
+       policy=st.sampled_from(["lru", "lfu", "lhd", "lac", "vacdh",
+                               "stoch_vacdh", "lru_mad"]),
+       cap=st.floats(2.0, 30.0))
+@settings(deadline=None, max_examples=20)
+def test_simulator_conservation_invariants(tr, policy, cap):
+    trace, n_obj = tr
+    r = simulate(trace, cap, policy)
+    n = trace.times.shape[0]
+    # every request is exactly one of hit/delayed/miss
+    assert int(r.n_hits) + int(r.n_delayed) + int(r.n_misses) == n
+    # latency is bounded by n * max realized fetch time
+    zmax = float(jnp.max(trace.z_draw))
+    assert 0.0 <= float(r.total_latency) <= n * zmax + 1e-3
+    # evictions can never exceed admissions (<= misses)
+    assert int(r.n_evictions) <= int(r.n_misses)
+
+
+@given(tr=small_trace())
+@settings(deadline=None, max_examples=15)
+def test_bigger_cache_never_hurts_hit_count_much(tr):
+    """Hit count should be (weakly) monotone in capacity for LRU on the same
+    trace (sanity: no pathological capacity behavior)."""
+    trace, _ = tr
+    small = simulate(trace, 3.0, "lru")
+    big = simulate(trace, 1e6, "lru")
+    assert int(big.n_hits) >= int(small.n_hits)
+    assert float(big.total_latency) <= float(small.total_latency) + 1e-3
+
+
+@given(seed=st.integers(0, 2**16), b=st.integers(1, 3),
+       s=st.sampled_from([16, 48]))
+@settings(deadline=None, max_examples=10)
+def test_attention_causality(seed, b, s):
+    """Perturbing future tokens must not change past outputs."""
+    from repro.models.attention import sdpa
+    key = jax.random.key(seed)
+    ks = jax.random.split(key, 4)
+    h, dh = 2, 16
+    q = jax.random.normal(ks[0], (b, s, h, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, dh), jnp.float32)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    out1 = sdpa(q, k, v, pos, pos)
+    cut = s // 2
+    k2 = k.at[:, cut:].add(jax.random.normal(ks[3], (b, s - cut, h, dh)))
+    v2 = v.at[:, cut:].add(1.0)
+    out2 = sdpa(q, k2, v2, pos, pos)
+    np.testing.assert_allclose(np.asarray(out1[:, :cut]),
+                               np.asarray(out2[:, :cut]), atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(deadline=None, max_examples=10)
+def test_gla_state_consistency_split_vs_full(seed):
+    """Running chunked GLA over [0:S] == running [0:S/2] then [S/2:S] with
+    the carried state (the prefill-then-continue invariant)."""
+    from repro.models.ssm import chunked_gla
+    key = jax.random.key(seed)
+    ks = jax.random.split(key, 5)
+    b, s, h, d = 1, 64, 2, 8
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, d), jnp.float32) * 0.3
+    v = jax.random.normal(ks[2], (b, s, h, d), jnp.float32)
+    lf = -jax.nn.softplus(-jax.random.normal(ks[3], (b, s, h)))
+    li = -jax.nn.softplus(-jax.random.normal(ks[4], (b, s, h)))
+    y_full, st_full = chunked_gla(q, k, v, lf, li, chunk=16)
+    h1, st1 = chunked_gla(q[:, :32], k[:, :32], v[:, :32],
+                          lf[:, :32], li[:, :32], chunk=16)
+    h2, st2 = chunked_gla(q[:, 32:], k[:, 32:], v[:, 32:],
+                          lf[:, 32:], li[:, 32:], chunk=16,
+                          init_state=st1)
+    np.testing.assert_allclose(np.asarray(y_full[:, 32:]), np.asarray(h2),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_full[0]), np.asarray(st2[0]),
+                               atol=1e-4, rtol=1e-3)
+
+
+@given(x=st.lists(st.floats(-1e5, 1e5), min_size=1, max_size=200))
+@settings(**_settings)
+def test_kahan_sum_tracks_float64(x):
+    from repro.core.state import kahan_add
+    total = comp = jnp.float32(0.0)
+    for v in x:
+        total, comp = kahan_add(total, comp, jnp.float32(v))
+    want = np.sum(np.asarray(x, np.float64))
+    scale = max(np.sum(np.abs(x)), 1.0)
+    assert abs(float(total) - want) / scale < 1e-5

@@ -1,0 +1,137 @@
+"""Serving engine: delayed-hit prefix cache semantics + continuous batcher."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import transformer as tf
+from repro.serving.engine import (DelayedHitPrefixCache, EngineStats,
+                                  LatencyModel, ServeEngine)
+from repro.serving.scheduler import ContinuousBatcher, Request, SchedulerConfig
+from repro.training.train_loop import make_serve_steps
+
+
+def test_engine_hit_delayed_miss_accounting():
+    eng = ServeEngine(capacity=10.0, policy="lru",
+                      latency=LatencyModel(base_s=1.0, per_token_s=0.0,
+                                           stochastic=False),
+                      state_size_fn=lambda n: 1.0, hedging=False)
+    # t=0 miss (fetch completes t=1); t=0.5 delayed hit (0.5s); t=2 hit.
+    l0 = eng.request(0.0, "p1", 100)
+    l1 = eng.request(0.5, "p1", 100)
+    l2 = eng.request(2.0, "p1", 100)
+    assert l0 == pytest.approx(1.0)
+    assert l1 == pytest.approx(0.5)
+    assert l2 == 0.0
+    s = eng.stats.as_dict()
+    assert (s["misses"], s["delayed_hits"], s["hits"]) == (1, 1, 1)
+    assert s["total_latency"] == pytest.approx(1.5)
+
+
+def test_engine_eviction_respects_capacity():
+    eng = ServeEngine(capacity=2.0, policy="lru",
+                      latency=LatencyModel(base_s=0.1, per_token_s=0.0,
+                                           stochastic=False),
+                      state_size_fn=lambda n: 1.0, hedging=False)
+    t = 0.0
+    for i, k in enumerate(["a", "b", "c"]):
+        eng.request(t + i, k, 10)
+    eng.request(10.0, "d", 10)      # commits a,b,c; d misses; evictions occur
+    assert eng.cache.free >= 0
+    occupied = sum(e.size for e in eng.cache.entries.values())
+    assert occupied <= 2.0 + 1e-6
+
+
+def test_engine_variance_aware_beats_lru_on_zipf_workload():
+    """End-to-end A/B: paper's policy vs LRU on a skewed prefix workload
+    with stochastic prefill latency."""
+    rng = np.random.default_rng(0)
+    n_prefix = 60
+    probs = (np.arange(1, n_prefix + 1) ** -1.0)
+    probs /= probs.sum()
+    t, times, keys, lens = 0.0, [], [], []
+    lengths = rng.integers(64, 2048, n_prefix)
+    for _ in range(8000):
+        t += rng.exponential(0.004)
+        k = rng.choice(n_prefix, p=probs)
+        times.append(t)
+        keys.append(f"p{k}")
+        lens.append(int(lengths[k]))
+
+    def run(policy):
+        eng = ServeEngine(capacity=6000.0, policy=policy,
+                          latency=LatencyModel(base_s=0.02,
+                                               per_token_s=5e-5),
+                          state_size_fn=lambda n: float(n), seed=7)
+        return eng.run_trace(times, keys, lens).as_dict()
+
+    ours = run("stoch_vacdh")
+    lru = run("lru")
+    assert ours["total_latency"] < lru["total_latency"]
+
+
+def test_engine_hedging_reduces_tail_latency():
+    def run(hedging):
+        rng_times = np.arange(0.0, 50.0, 0.05)
+        eng = ServeEngine(capacity=1.0, policy="lru",
+                          latency=LatencyModel(base_s=0.2, per_token_s=0.0,
+                                               stochastic=True),
+                          state_size_fn=lambda n: 2.0,  # never admissible
+                          hedging=hedging, seed=3)
+        for i, t in enumerate(rng_times):
+            eng.request(float(t), f"k{i}", 10)   # all unique -> all misses
+        return eng.stats
+    base = run(False)
+    hedged = run(True)
+    assert hedged.hedges > 0
+    assert hedged.total_latency < base.total_latency
+
+
+def test_prefix_cache_stats_mirror_core_ranking():
+    c = DelayedHitPrefixCache(10.0, "stoch_vacdh")
+    for t in (1.0, 2.0, 3.0):
+        c.touch("a", t)
+    i = c.key_to_idx["a"]
+    assert c.obj.count[i] == 3.0
+    assert c.obj.gap_mean[i] == pytest.approx(1.0)
+
+
+def test_continuous_batcher_matches_single_forward():
+    cfg = registry.smoke("stablelm-1.6b")
+    params = tf.init_params(jax.random.key(0), cfg)
+    prefill, decode = make_serve_steps(cfg)
+    import jax as _jax
+    prefill_j = _jax.jit(lambda c, b: prefill(params, c, b))
+    decode_j = _jax.jit(lambda c, t, p: decode(params, c, tokens=t, pos0=p))
+
+    batcher = ContinuousBatcher(
+        SchedulerConfig(max_batch=4),
+        prefill_step=prefill_j, decode_step=decode_j,
+        init_cache=lambda b, cap: tf.init_cache(cfg, b, cap))
+    prompts = [np.array([1, 2, 3, 4]), np.array([5, 6, 7]),
+               np.array([9, 10, 11, 12, 13])]
+    for i, p in enumerate(prompts):
+        batcher.submit(Request(rid=i, tokens=p, max_new=4))
+    done = batcher.drain()
+    assert done == 3
+
+    # greedy reference decode for prompt 0
+    toks = list(prompts[0])
+    for _ in range(4):
+        logits, _, _ = tf.forward(params, cfg,
+                                  tokens=jnp.asarray([toks], jnp.int32),
+                                  mode="train")
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    req0 = [r for r in [Request(0, prompts[0], 4)]]  # placeholder for lint
+    # the batcher stored outputs on its own Request objects; re-run to fetch
+    b2 = ContinuousBatcher(
+        SchedulerConfig(max_batch=1),
+        prefill_step=prefill_j, decode_step=decode_j,
+        init_cache=lambda b, cap: tf.init_cache(cfg, b, cap))
+    r = Request(rid=0, tokens=prompts[0], max_new=4)
+    b2.submit(r)
+    b2.drain()
+    assert r.out == toks[len(prompts[0]):]

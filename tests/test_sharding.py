@@ -1,0 +1,112 @@
+"""Sharding-spec inference + local-mesh integration of the sharded steps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import registry
+from repro.models import transformer as tf
+from repro.sharding import specs
+
+
+@pytest.fixture(scope="module")
+def mesh2d():
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_param_spec_rules(mesh2d):
+    m = mesh2d
+    # column-parallel (stacked layer params are 3-D: L leading)
+    assert (specs.param_spec(m, "/layers/attn/wq", (4, 64, 64))
+            == P(None, ("data",), "model"))
+    # row-parallel
+    assert (specs.param_spec(m, "/layers/attn/wo", (4, 64, 64))
+            == P(None, "model", ("data",)))
+    # stacked layer dim stays unsharded
+    sp = specs.param_spec(m, "/layers/mlp/w_up", (4, 64, 128))
+    assert sp[0] is None
+    # embed: vocab over TP (top-level, 2-D)
+    assert specs.param_spec(m, "/embed", (256, 64)) == P("model", ("data",))
+    # norms replicate
+    assert specs.param_spec(m, "/layers/ln1", (4, 64)) == P(None, None)
+
+
+def test_divisibility_fallback():
+    """Non-divisible dims must fall back, never crash: vocab 32001 etc."""
+    dev = np.array(jax.devices() * 1).reshape(1, 1)
+    m = Mesh(dev, ("data", "model"))
+    sp = specs.param_spec(m, "/lm_head", (1600, 32001))
+    assert sp is not None  # any valid spec is fine on 1x1
+    # pretend 16-way axes via divisibility math: direct best_spec check
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    fm = FakeMesh()
+    sp = specs.best_spec(fm, (1600, 32001), [[(1, "model")], [(0, ("data",))]])
+    # 32001 % 16 != 0 -> vocab unsharded; 1600 % 16 == 0 -> data on dim0
+    assert sp == P(("data",), None)
+
+
+def test_expert_spec_ep_vs_tp():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    fm = FakeMesh()
+    # E=16 divides model: EP
+    sp = specs.param_spec(fm, "/layers/moe/experts/w_up", (32, 16, 4096, 6400))
+    assert sp[1] == "model"
+    # E=8 doesn't: TP on ff dim instead
+    sp = specs.param_spec(fm, "/layers/moe/experts/w_up", (64, 8, 6144, 32768))
+    assert sp[1] is None and sp[3] == "model"
+    assert sp == P(None, None, ("data",), "model")
+
+
+def test_cache_spec_prefers_batch_then_heads():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    fm = FakeMesh()
+    # kv=8 not divisible -> dh sharded
+    sp = specs.cache_spec(fm, "/attn/k", (64, 128, 32768, 8, 128))
+    assert sp == P(None, ("data",), None, None, "model")
+    # kv=32 divisible -> kv sharded
+    sp = specs.cache_spec(fm, "/attn/k", (24, 128, 32768, 32, 64))
+    assert sp == P(None, ("data",), None, "model", None)
+
+
+def test_sharded_train_step_runs_on_local_mesh(mesh2d):
+    """End-to-end: the exact dry-run cell path executes with real arrays on
+    the 1-device production-axis mesh."""
+    import dataclasses
+
+    from repro.data.tokens import DataConfig, batch_at
+    from repro.sharding.activation import activation_sharding
+    from repro.training.optimizer import init_opt
+    from repro.training.train_loop import TrainConfig, make_train_step
+
+    cfg = dataclasses.replace(registry.smoke("stablelm-1.6b"), remat="none")
+    m = mesh2d
+    with m:
+        params = tf.init_params(jax.random.key(0), cfg)
+        opt = init_opt(params)
+        batch = batch_at(DataConfig(vocab=cfg.vocab, seq_len=16,
+                                    global_batch=4), 0)
+        rules = specs.activation_rules(m, seq_shard=False)
+        step = make_train_step(cfg, TrainConfig())
+
+        def wrapped(p, o, b):
+            with activation_sharding(m, rules):
+                return step(p, o, b)
+
+        p2, o2, metrics = jax.jit(wrapped)(params, opt, batch)
+        assert np.isfinite(float(metrics["loss"]))
+
+
+def test_constrain_drops_nondivisible_axes(mesh2d):
+    from repro.sharding.activation import activation_sharding, constrain
+    with activation_sharding(mesh2d, {"x": P("data", "model")}):
+        # 1x1 mesh divides everything; just exercises the path
+        y = constrain(jnp.ones((4, 6)), "x")
+        assert y.shape == (4, 6)
+        # unknown name: identity
+        z = constrain(jnp.ones((3,)), "unknown")
+        assert z.shape == (3,)

@@ -1,0 +1,156 @@
+"""Training substrate: optimizer, checkpoint/restore, trainer resume,
+gradient compression."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.data.tokens import DataConfig
+from repro.training.checkpoint import CheckpointManager
+from repro.training.compression import (compress_error_feedback,
+                                        init_error_buffer)
+from repro.training.optimizer import (OptConfig, apply_updates, global_norm,
+                                      init_opt, schedule)
+from repro.training.train_loop import TrainConfig
+from repro.training.trainer import RunConfig, Trainer
+
+
+def test_adamw_decreases_quadratic_loss():
+    w = {"a": jnp.array([2.0, -3.0]), "b": jnp.array([[1.5]])}
+    opt = init_opt(w)
+    cfg = OptConfig(lr=0.05, warmup_steps=0, total_steps=200,
+                    weight_decay=0.0)
+    loss = lambda p: jnp.sum(p["a"] ** 2) + jnp.sum(p["b"] ** 2)
+    l0 = float(loss(w))
+    for _ in range(100):
+        g = jax.grad(loss)(w)
+        w, opt, _ = apply_updates(w, g, opt, cfg)
+    assert float(loss(w)) < 0.05 * l0
+
+
+def test_lr_schedule_warmup_and_cosine():
+    cfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                    min_lr_frac=0.1)
+    assert float(schedule(cfg, jnp.int32(0))) == 0.0
+    np.testing.assert_allclose(float(schedule(cfg, jnp.int32(10))), 1e-3,
+                               rtol=1e-5)
+    assert float(schedule(cfg, jnp.int32(100))) == pytest.approx(1e-4,
+                                                                 rel=1e-3)
+
+
+def test_grad_clip_bounds_update_norm():
+    w = {"a": jnp.ones((4,))}
+    opt = init_opt(w)
+    cfg = OptConfig(lr=1.0, warmup_steps=0, clip_norm=1.0, weight_decay=0.0)
+    huge = {"a": jnp.full((4,), 1e6)}
+    _, _, m = apply_updates(w, huge, opt, cfg)
+    assert float(m["grad_norm"]) > 1e6  # reported pre-clip
+    # post-clip m estimate bounded: first-step |update| <= lr * 1/ (sqrt(vhat)+eps) ~ 1
+    # (smoke check: no inf/nan)
+    assert np.isfinite(float(m["grad_norm"]))
+
+
+def test_checkpoint_roundtrip_and_atomicity(tmp_path):
+    tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)}}
+    cm = CheckpointManager(tmp_path, keep=2)
+    cm.save(1, tree, block=True)
+    cm.save(2, jax.tree.map(lambda x: x + 1, tree), block=True)
+    assert cm.latest_step() == 2
+    got = cm.restore(2, jax.tree.map(jnp.zeros_like, tree))
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(tree["w"]) + 1)
+    assert got["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    cm = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        cm.save(s, {"x": jnp.float32(s)}, block=True)
+    assert sorted(cm.steps()) == [3, 4]
+
+
+def test_trainer_runs_and_resumes(tmp_path):
+    cfg = dataclasses.replace(registry.smoke("stablelm-1.6b"),
+                              remat="none")
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=2,
+                                     total_steps=20))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=4)
+    rcfg = RunConfig(steps=6, ckpt_every=3, log_every=3,
+                     ckpt_dir=str(tmp_path))
+    t1 = Trainer(cfg, tcfg, dcfg, rcfg, log_fn=lambda s: None)
+    out1 = t1.run()
+    assert out1["final_step"] == 6
+    losses = [h["loss"] for h in out1["history"]]
+    assert all(np.isfinite(losses))
+    # resume: new trainer picks up from the final checkpoint
+    rcfg2 = dataclasses.replace(rcfg, steps=9)
+    t2 = Trainer(cfg, tcfg, dcfg, rcfg2, log_fn=lambda s: None)
+    assert t2.start_step == 6
+    out2 = t2.run()
+    assert out2["final_step"] == 9
+
+
+def test_training_loss_decreases_smoke(tmp_path):
+    cfg = dataclasses.replace(registry.smoke("stablelm-1.6b"), remat="none")
+    tcfg = TrainConfig(opt=OptConfig(lr=3e-3, warmup_steps=5,
+                                     total_steps=60))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
+    rcfg = RunConfig(steps=60, ckpt_every=1000, log_every=5,
+                     ckpt_dir=str(tmp_path))
+    t = Trainer(cfg, tcfg, dcfg, rcfg, log_fn=lambda s: None)
+    out = t.run()
+    first = out["history"][0]["loss"]
+    last = out["history"][-1]["loss"]
+    assert last < first - 0.5, (first, last)
+
+
+def test_microbatched_grads_match_full_batch():
+    from repro.training.train_loop import make_train_step
+    cfg = dataclasses.replace(registry.smoke("stablelm-1.6b"), remat="none")
+    from repro.models import transformer as tf
+    params = tf.init_params(jax.random.key(0), cfg)
+    batch = {
+        "tokens": jax.random.randint(jax.random.key(1), (8, 16), 0,
+                                     cfg.vocab),
+        "labels": jax.random.randint(jax.random.key(2), (8, 16), 0,
+                                     cfg.vocab)}
+    opt = init_opt(params)
+    s1 = make_train_step(cfg, TrainConfig(microbatches=1))
+    s4 = make_train_step(cfg, TrainConfig(microbatches=4))
+    p1, _, m1 = s1(params, opt, batch)
+    p4, _, m4 = s4(params, opt, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=2e-2)
+    # parameters after one step agree to bf16-ish tolerance
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=5e-2, rtol=5e-2)
+
+
+def test_compression_error_feedback_converges():
+    """Compressed sum with EF ~ uncompressed sum over repeated steps."""
+    key = jax.random.key(0)
+    g = {"w": jax.random.normal(key, (256,)) * jnp.float32(3.0)}
+    err = init_error_buffer(g)
+    acc_q = jnp.zeros((256,))
+    for _ in range(50):
+        q, err = compress_error_feedback(g, err)
+        acc_q = acc_q + q["w"]
+    acc_true = g["w"] * 50
+    # EF bounds the accumulated bias to O(1) quantization steps
+    resid = float(jnp.max(jnp.abs(acc_q - acc_true)))
+    scale = float(jnp.max(jnp.abs(g["w"])))
+    assert resid < 2.5 * scale / 127 * 50 ** 0.5 + scale / 64
+
+
+def test_global_norm_matches_numpy():
+    tree = {"a": jnp.arange(3, dtype=jnp.float32),
+            "b": {"c": jnp.full((2, 2), 2.0)}}
+    want = np.sqrt(np.sum(np.arange(3.0) ** 2) + 4 * 4.0)
+    np.testing.assert_allclose(float(global_norm(tree)), want, rtol=1e-6)
