@@ -7,6 +7,7 @@ import time
 from pathlib import Path
 
 import jax
+import jax.numpy as jnp
 
 RESULTS_DIR = Path(__file__).parent / "results"
 
@@ -31,7 +32,8 @@ def emit(rows: list[dict], name: str, echo: bool = True) -> Path:
 
 def improvement_table(trace, capacity, policies=POLICY_SET, params=None,
                       extra: dict | None = None,
-                      estimate_z: bool = True) -> list[dict]:
+                      estimate_z: bool = True,
+                      use_kernel=False) -> list[dict]:
     """Latency improvement vs LRU (paper eq. 17) for each policy.
     estimate_z=True: policies see only observed fetch durations (the paper's
     operational setting for stochastic latency)."""
@@ -42,7 +44,8 @@ def improvement_table(trace, capacity, policies=POLICY_SET, params=None,
     rows = []
     for pol in policies:
         t0 = time.time()
-        r = simulate(trace, capacity, pol, params, estimate_z=estimate_z)
+        r = simulate(trace, capacity, pol, params, estimate_z=estimate_z,
+                     use_kernel=use_kernel)
         lat = float(r.total_latency)
         rows.append(dict(
             policy=pol,
@@ -56,6 +59,141 @@ def improvement_table(trace, capacity, policies=POLICY_SET, params=None,
     return rows
 
 
+LANE_BUCKET = 12    # pad sweep grids so differently-sized sweeps share XLA
+
+
+def _grid_rows(g, policies, names, per_pt, extra, extra_fn) -> list[dict]:
+    """Flatten a SweepGrid into improvement_table-schema rows."""
+    lru_li = names.index("lru")
+    T, _, P, C, S = g.result.total_latency.shape
+    rows = []
+    for pol in policies:
+        li = names.index(pol)
+        for ti in range(T):
+            for pi in range(P):
+                for ci in range(C):
+                    for si in range(S):
+                        r = g.point(ti, li, pi, ci, si)
+                        lat = float(r.total_latency)
+                        lb = float(g.result.total_latency[ti, lru_li, pi,
+                                                          ci, si])
+                        row = dict(
+                            policy=pol,
+                            latency=round(lat, 4),
+                            improvement_vs_lru=round((lb - lat) / lb, 5),
+                            hit_ratio=round(float(r.hit_ratio), 4),
+                            delayed_ratio=round(
+                                float(r.n_delayed)
+                                / max(float(r.n_requests), 1), 4),
+                            sim_s=round(per_pt, 3),
+                            **(extra or {}),
+                            **(extra_fn(g.params[pi]) if extra_fn else {}))
+                        row["capacity"] = round(float(g.capacities[ci]), 1)
+                        if T > 1:
+                            row["trace_idx"] = ti
+                        if S > 1:
+                            row["seed"] = g.seeds[si]
+                        rows.append(row)
+    return rows
+
+
+def sweep_improvement_table(traces, capacities, policies, params=None,
+                            seeds=(0,), extra: dict | None = None,
+                            extra_fn=None, estimate_z: bool = True,
+                            graph_policies=None, unified: bool = True,
+                            lane_bucket: int | None = LANE_BUCKET
+                            ) -> list[dict]:
+    """improvement_table over a whole scenario grid via core/sweep.py.
+
+    ``unified=True``: ONE compiled+batched call — the LRU baseline rides as
+    a lane of the unified multi-policy graph — covers policies x traces x
+    params x capacities x seeds.  Right for small object universes and
+    policy subsets (fig4's sensitivity grids), where the whole sweep's
+    dispatch-and-compile overhead collapses into one call.
+
+    ``unified=False``: one single-policy (statically specialized) batched
+    call per policy plus one for the LRU baseline.  Right for large-N or
+    full policy-roster tables (fig2/fig5): evaluating every rank function in
+    lockstep would multiply the per-step element work (EXPERIMENTS.md
+    §Perf), while per-policy graphs stay lean and — with the traces padded
+    to one shape — compile once per policy for the whole figure.
+
+    ``extra_fn(params) -> dict`` labels rows per grid point (e.g. the swept
+    omega); ``extra`` labels every row.  ``graph_policies`` optionally names
+    a superset policy list to build the unified graph with, so consecutive
+    sweeps over different policy subsets reuse one compiled graph (rows are
+    only emitted for ``policies``).  ``lane_bucket`` applies to the unified
+    path only: per-policy grids within one call already share a shape, and
+    padding them would also flip small grids onto the batched (one-hot)
+    update path — a net loss at large N.
+    """
+    from repro.core import PolicyParams, SimResult, sweep_grid
+    from repro.core.trace import Trace
+
+    trace_list = [traces] if isinstance(traces, Trace) else list(traces)
+    params_list = (list(params) if isinstance(params, (list, tuple))
+                   else [params or PolicyParams()])
+    policies = list(policies)
+
+    if unified:
+        if graph_policies is not None:
+            names = list(graph_policies)
+            names += [p for p in policies + ["lru"] if p not in names]
+        else:
+            names = policies if "lru" in policies else ["lru"] + policies
+        t0 = time.time()
+        g = sweep_grid(trace_list, capacities, names, params_list, seeds,
+                       estimate_z=estimate_z, lane_bucket=lane_bucket)
+        block_until_ready_tree(g.result)
+        shape = g.result.total_latency.shape
+        n_pts = 1
+        for s in shape:
+            n_pts *= int(s)
+        per_pt = (time.time() - t0) / max(n_pts, 1)
+        return _grid_rows(g, policies, names, per_pt, extra, extra_fn)
+
+    # per-policy path: one batched call per policy; stitch the per-policy
+    # [T, 1, P, C, S] grids into one [T, L, P, C, S] result for row emission
+    names = policies if "lru" in policies else ["lru"] + policies
+    t0 = time.time()
+    grids = [sweep_grid(trace_list, capacities, pol, params_list, seeds,
+                        estimate_z=estimate_z, lane_bucket=None)
+             for pol in names]
+    for g in grids:
+        block_until_ready_tree(g.result)
+    joined = SimResult(*(jnp.concatenate([g.result[f] for g in grids], axis=1)
+                         for f in range(len(grids[0].result))))
+    g0 = grids[0]
+    g = g0._replace(result=joined, policies=tuple(names))
+    n_pts = 1
+    for s in joined.total_latency.shape:
+        n_pts *= int(s)
+    per_pt = (time.time() - t0) / max(n_pts, 1)
+    return _grid_rows(g, policies, names, per_pt, extra, extra_fn)
+
+
 def block_until_ready_tree(x):
     jax.tree.map(lambda a: a.block_until_ready()
                  if hasattr(a, "block_until_ready") else a, x)
+
+
+def pad_trace_objects(trace, n_objects: int):
+    """Pad the object universe with never-requested dummies.
+
+    Traces whose only shape difference is the universe size then share one
+    compiled sweep graph (fig5's surrogates).  Dummies are never requested,
+    so they are never cached, in flight, or eviction victims — results are
+    bitwise unchanged; their rank rows are computed and discarded.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.trace import Trace
+    pad = n_objects - trace.n_objects
+    if pad <= 0:
+        return trace
+    return Trace(trace.times, trace.objs,
+                 jnp.concatenate([trace.sizes,
+                                  jnp.ones((pad,), jnp.float32)]),
+                 jnp.concatenate([trace.z_mean,
+                                  jnp.ones((pad,), jnp.float32)]),
+                 trace.z_draw)

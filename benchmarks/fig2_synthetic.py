@@ -2,7 +2,9 @@
 
 100k requests, 100 objects, Zipf popularity, sizes U[1,100] MB, C = 500 MB,
 miss latency = L + c*size with Exp-distributed realizations; arrivals Poisson
-AND Pareto (the paper's robustness axis)."""
+AND Pareto (the paper's robustness axis).  Runs through the batched sweep
+engine: per (arrival, latency_base) cell, all ``--seeds`` trace replicas are
+stacked and vmapped in one compiled call per policy."""
 from __future__ import annotations
 
 import argparse
@@ -12,10 +14,10 @@ import jax
 from repro.core import PolicyParams
 from repro.data.traces import SyntheticSpec, synthetic_trace
 
-from .common import POLICY_SET, emit, improvement_table
+from .common import POLICY_SET, emit, sweep_improvement_table
 
 
-def run(full: bool = False, seed: int = 0) -> list[dict]:
+def run(full: bool = False, seed: int = 0, n_seeds: int = 1) -> list[dict]:
     n_req = 100_000 if full else 30_000
     rows = []
     for arrival in ("poisson", "pareto"):
@@ -24,28 +26,36 @@ def run(full: bool = False, seed: int = 0) -> list[dict]:
                 n_objects=100, n_requests=n_req, zipf_alpha=0.9,
                 rate=2000.0, arrival=arrival, latency_base=latency_base,
                 latency_per_mb=2e-4, stochastic=True)
-            trace = synthetic_trace(jax.random.key(seed), spec)
-            # paper-faithful substrate (recency residual, online z)
-            rows += improvement_table(
-                trace, capacity=500.0, policies=POLICY_SET,
+            traces = [synthetic_trace(jax.random.key(seed + s), spec)
+                      for s in range(n_seeds)]
+            # paper-faithful substrate (recency residual, online z);
+            # per-policy graphs — the full roster over a large universe is
+            # exactly where lockstep multi-policy lanes don't pay (see
+            # sweep_improvement_table)
+            rows += sweep_improvement_table(
+                traces, 500.0, policies=POLICY_SET,
                 params=PolicyParams(omega=1.0, resid="recency"),
                 extra=dict(arrival=arrival, latency_base=latency_base,
-                           n_requests=n_req, resid="recency"))
-            # beyond-paper estimator (rate residual) — §Beyond
-            rows += improvement_table(
-                trace, capacity=500.0,
+                           n_requests=n_req, resid="recency"),
+                unified=False)
+            # beyond-paper estimator (rate residual) — EXPERIMENTS.md §Beyond
+            rows += sweep_improvement_table(
+                traces, 500.0,
                 policies=["lac", "vacdh", "stoch_vacdh"],
                 params=PolicyParams(omega=1.0, resid="rate"),
                 extra=dict(arrival=arrival, latency_base=latency_base,
-                           n_requests=n_req, resid="rate"))
+                           n_requests=n_req, resid="rate"),
+                unified=False)
     return rows
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="trace replicas per cell (batched in one sweep)")
     args = ap.parse_args()
-    emit(run(full=args.full), "fig2_synthetic")
+    emit(run(full=args.full, n_seeds=args.seeds), "fig2_synthetic")
 
 
 if __name__ == "__main__":

@@ -1,51 +1,167 @@
 """Paper Fig. 4: sensitivity to omega (variance weight) and the estimation
 window (paper's S; here the per-object EWMA factor gap_alpha, reported as the
-window-equivalent length W ~ 2/alpha - 1). L = 5 ms as in §5.4."""
+window-equivalent length W ~ 2/alpha - 1). L = 5 ms as in §5.4.
+
+The omega and window grids run through the batched sweep engine
+(repro.core.sweep) — one compiled call per policy instead of one dispatch
+per grid point.  ``--compare`` times the legacy per-point loop against the
+sweep path and emits the speedup (recorded in EXPERIMENTS.md §Perf).
+Beyond the paper, a distribution-sensitivity sweep ranks with matched vs
+mismatched miss-latency laws on Erlang / hyperexponential traces.
+"""
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 
-from repro.core import PolicyParams
+from repro.core import Erlang, Hyperexponential, PolicyParams
 from repro.data.traces import SyntheticSpec, synthetic_trace
 
-from .common import emit, improvement_table
+from .common import emit, improvement_table, sweep_improvement_table
+
+# Every fig4 sweep builds its graph with this superset so the omega, window,
+# and resid grids share ONE compiled unified-policy graph.
+GRAPH = ("lru", "vacdh", "stoch_vacdh", "lac")
+
+
+def _spec(n_req: int, **kw) -> SyntheticSpec:
+    return SyntheticSpec(n_objects=100, n_requests=n_req, rate=2000.0,
+                         latency_base=0.005, latency_per_mb=2e-4,
+                         stochastic=True, **kw)
+
+
+def _grids(full: bool):
+    omegas = (0.0, 0.25, 0.5, 1.0, 2.0, 4.0) if full else (0.0, 1.0, 2.0)
+    windows = (4, 16, 64, 256, 1024) if full else (4, 64, 1024)
+    return omegas, windows
 
 
 def run(full: bool = False, seed: int = 0) -> list[dict]:
     n_req = 100_000 if full else 30_000
-    spec = SyntheticSpec(n_objects=100, n_requests=n_req, rate=2000.0,
-                         latency_base=0.005, latency_per_mb=2e-4,
-                         stochastic=True)
-    trace = synthetic_trace(jax.random.key(seed), spec)
+    trace = synthetic_trace(jax.random.key(seed), _spec(n_req))
+    omegas, windows = _grids(full)
     rows = []
-    omegas = (0.0, 0.25, 0.5, 1.0, 2.0, 4.0) if full else (0.0, 1.0, 2.0)
-    for omega in omegas:
-        rows += improvement_table(
-            trace, 500.0, policies=["vacdh", "stoch_vacdh"],
-            params=PolicyParams(omega=omega),
-            extra=dict(sweep="omega", omega=omega, window=64))
-    windows = (4, 16, 64, 256, 1024) if full else (4, 64, 1024)
-    for w in windows:
-        rows += improvement_table(
-            trace, 500.0, policies=["stoch_vacdh"],
-            params=PolicyParams(omega=1.0, window=w),
-            extra=dict(sweep="window", omega=1.0, window=w))
-    # residual-estimator ablation (rate vs LRU-recency proxy)
-    for mode in ("rate", "recency"):
-        rows += improvement_table(
-            trace, 500.0, policies=["stoch_vacdh", "vacdh", "lac"],
-            params=PolicyParams(omega=1.0, resid=mode),
-            extra=dict(sweep="resid", omega=1.0, window=64, resid=mode))
+    # omega sweep — the whole grid (incl. the LRU baseline lane) is one
+    # batched call on the shared unified-policy graph
+    rows += sweep_improvement_table(
+        trace, 500.0, policies=["vacdh", "stoch_vacdh"],
+        params=[PolicyParams(omega=o) for o in omegas],
+        extra=dict(sweep="omega"), graph_policies=GRAPH,
+        extra_fn=lambda p: dict(omega=p.omega, window=p.window))
+    # window sweep — window is a traced leaf now, so no per-point retraces
+    rows += sweep_improvement_table(
+        trace, 500.0, policies=["stoch_vacdh"],
+        params=[PolicyParams(omega=1.0, window=w) for w in windows],
+        extra=dict(sweep="window"), graph_policies=GRAPH,
+        extra_fn=lambda p: dict(omega=p.omega, window=p.window))
+    # residual-estimator ablation — resid_rate is a traced leaf, so both
+    # estimators are one params axis on the same graph
+    rows += sweep_improvement_table(
+        trace, 500.0, policies=["stoch_vacdh", "vacdh", "lac"],
+        params=[PolicyParams(omega=1.0, resid=m)
+                for m in ("rate", "recency")],
+        extra=dict(sweep="resid", omega=1.0, window=64),
+        graph_policies=GRAPH,
+        extra_fn=lambda p: dict(
+            resid="rate" if float(p.resid_rate) > 0.5 else "recency"))
+    # distribution sensitivity (beyond both papers): trace latency follows
+    # Erlang/hyperexponential; rank with Theorem-2-equivalent moments
+    # (Erlang k=1 / degenerate mixture) vs the matched law's moments through
+    # the same eq.-16 form.  Each mismatched/matched pair shares a treedef,
+    # so it is again one batched call per latency family.
+    dist_pairs = (
+        ("erlang", dict(k=3),
+         [Erlang(k=1.0), Erlang(k=3.0)]),
+        ("hyperexp", dict(p=0.9, mu_fast=0.3),
+         [Hyperexponential(p=0.9, mu_fast=1.0),
+          Hyperexponential(p=0.9, mu_fast=0.3)]),
+    )
+    for dist_name, kw, assumed in dist_pairs:
+        tr = synthetic_trace(
+            jax.random.key(seed),
+            _spec(n_req, latency_dist=dist_name,
+                  dist_kwargs=tuple(kw.items())))
+        labels = {0: "exponential-equivalent", 1: dist_name}
+        idx = {id(d): i for i, d in enumerate(assumed)}
+        rows += sweep_improvement_table(
+            tr, 500.0, policies=["stoch_vacdh"],
+            params=[PolicyParams(omega=1.0, dist=d) for d in assumed],
+            extra=dict(sweep="dist", trace_dist=dist_name, omega=1.0,
+                       window=64),
+            extra_fn=lambda p: dict(
+                assumed_dist=labels[idx[id(p.dist)]]),
+            lane_bucket=None)    # own treedef -> own graph; don't pad
     return rows
+
+
+def run_compare(full: bool = False, seed: int = 0) -> list[dict]:
+    """Time the per-point dispatch loop vs the batched engine.
+
+    Both paths start from a cleared jit cache, so each pays its own compile
+    once (per policy for the loop, per unified graph for the engine) plus
+    its dispatch structure — one `simulate` call per grid point vs one
+    batched call per sweep.  Note this measures dispatch/compile *shape*,
+    not the seed's per-window retraces: this PR made window a traced leaf,
+    so the loop path no longer retraces per setting either (the seed-vs-new
+    comparison lives in EXPERIMENTS.md §Perf).
+    """
+    n_req = 100_000 if full else 30_000
+    trace = synthetic_trace(jax.random.key(seed), _spec(n_req))
+    omegas, windows = _grids(full)
+
+    def legacy():
+        rows = []
+        for omega in omegas:
+            rows += improvement_table(
+                trace, 500.0, policies=["vacdh", "stoch_vacdh"],
+                params=PolicyParams(omega=omega),
+                extra=dict(sweep="omega", omega=omega, window=64))
+        for w in windows:
+            rows += improvement_table(
+                trace, 500.0, policies=["stoch_vacdh"],
+                params=PolicyParams(omega=1.0, window=w),
+                extra=dict(sweep="window", omega=1.0, window=w))
+        return rows
+
+    def batched():
+        rows = sweep_improvement_table(
+            trace, 500.0, policies=["vacdh", "stoch_vacdh"],
+            params=[PolicyParams(omega=o) for o in omegas],
+            extra=dict(sweep="omega"), graph_policies=GRAPH,
+            extra_fn=lambda p: dict(omega=p.omega, window=p.window))
+        rows += sweep_improvement_table(
+            trace, 500.0, policies=["stoch_vacdh"],
+            params=[PolicyParams(omega=1.0, window=w) for w in windows],
+            extra=dict(sweep="window"), graph_policies=GRAPH,
+            extra_fn=lambda p: dict(omega=p.omega, window=p.window))
+        return rows
+
+    out = []
+    for name, fn in (("legacy_per_point", legacy), ("batched_sweep", batched)):
+        jax.clear_caches()
+        t0 = time.time()
+        rows = fn()
+        dt = time.time() - t0
+        out.append(dict(path=name, wall_s=round(dt, 2), n_rows=len(rows),
+                        n_req=n_req))
+    out.append(dict(path="speedup",
+                    wall_s=round(out[0]["wall_s"] / out[1]["wall_s"], 2),
+                    n_rows=0, n_req=n_req))
+    return out
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--compare", action="store_true",
+                    help="time legacy per-point loop vs batched sweep")
     args = ap.parse_args()
-    emit(run(full=args.full), "fig4_sensitivity")
+    if args.compare:
+        emit(run_compare(full=args.full), "fig4_sweep_speedup")
+    else:
+        emit(run(full=args.full), "fig4_sensitivity")
 
 
 if __name__ == "__main__":

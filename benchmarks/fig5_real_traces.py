@@ -1,6 +1,8 @@
 """Paper Fig. 5: latency improvement on the four (surrogate) real traces,
 256 GB-equivalent cache (scaled to the surrogate footprint ratio), multiple
-fetch-latency settings."""
+fetch-latency settings.  Per surrogate, the cache-capacity axis (10% of
+footprint by default, plus 5%/20% with ``--full``) is batched through the
+sweep engine in one compiled call per policy."""
 from __future__ import annotations
 
 import argparse
@@ -10,29 +12,48 @@ import numpy as np
 from repro.core import PolicyParams
 from repro.data.traces import SURROGATES, surrogate_trace
 
-from .common import POLICY_SET, emit, improvement_table
+from .common import (POLICY_SET, emit, pad_trace_objects,
+                     sweep_improvement_table)
 
 
 def run(full: bool = False) -> list[dict]:
     rows = []
+    # Pad every surrogate to the largest universe so each policy traces and
+    # compiles ONE graph for all four surrogates instead of the seed's
+    # policy x shape explosion (~48 graphs).  The extra O(N) commit work on
+    # the smaller universes costs less than per-shape trace+compile — both
+    # variants measured in EXPERIMENTS.md §Perf; results are bitwise
+    # unchanged (see pad_trace_objects).
+    n_max = max(s.n_objects for s in SURROGATES.values())
+    # the request axis must match across surrogates too for graph sharing
+    # (padding can't extend it safely), so --full unifies the count upward
+    n_req = 200_000 if full else 40_000
     for name in SURROGATES:
-        overrides = {} if full else {"n_requests": 40_000}
+        overrides = {"n_requests": n_req}
         trace = surrogate_trace(name, **overrides)
         footprint = float(np.asarray(trace.sizes).sum())
-        capacity = 0.1 * footprint      # paper's 256GB ~ O(10%) of footprint
+        # paper's 256GB ~ O(10%) of footprint; --full adds a capacity sweep
+        # (per-row capacities are in the emitted `capacity` column)
+        ratios = (0.05, 0.1, 0.2) if full else (0.1,)
+        capacities = [r * footprint for r in ratios]
         bases = (0.002, 0.005, 0.02) if full else (0.005,)
         for lb in bases:
-            tr = surrogate_trace(name, latency_base=lb, **overrides)
-            rows += improvement_table(
-                tr, capacity, policies=POLICY_SET,
+            tr = pad_trace_objects(
+                surrogate_trace(name, latency_base=lb, **overrides), n_max)
+            common = dict(trace=name, latency_base=lb,
+                          footprint_mb=round(footprint, 1))
+            # per-policy graphs (unified lockstep lanes would multiply the
+            # N=3000-element step work by the policy count); the padded
+            # shapes mean each policy compiles ONCE for all four surrogates
+            # instead of the seed's policy x shape retrace explosion
+            rows += sweep_improvement_table(
+                tr, capacities, policies=POLICY_SET,
                 params=PolicyParams(omega=1.0, resid="recency"),
-                extra=dict(trace=name, latency_base=lb, resid="recency",
-                           capacity_mb=round(capacity, 1)))
-            rows += improvement_table(
-                tr, capacity, policies=["lac", "vacdh", "stoch_vacdh"],
+                extra=dict(resid="recency", **common), unified=False)
+            rows += sweep_improvement_table(
+                tr, capacities, policies=["lac", "vacdh", "stoch_vacdh"],
                 params=PolicyParams(omega=1.0, resid="rate"),
-                extra=dict(trace=name, latency_base=lb, resid="rate",
-                           capacity_mb=round(capacity, 1)))
+                extra=dict(resid="rate", **common), unified=False)
     return rows
 
 

@@ -1,18 +1,30 @@
 """Core library: the paper's delayed-hit caching technique.
 
-- :mod:`delay_stats` — Theorem 1 & 2 analytic moments + Monte-Carlo oracle.
-- :mod:`ranking`     — eq. 16 variance-aware ranking + every §5.1 baseline.
-- :mod:`simulator`   — vectorized lax.scan trace simulator.
-- :mod:`refsim`      — event-driven reference (test oracle).
-- :mod:`trace`       — trace schema.
+- :mod:`delay_stats`   — Theorem 1 & 2 analytic moments + Monte-Carlo oracle.
+- :mod:`distributions` — pluggable miss-latency laws (Deterministic /
+                         Exponential / Erlang / Hyperexponential / MC).
+- :mod:`ranking`       — eq. 16 variance-aware ranking + every §5.1 baseline.
+- :mod:`simulator`     — vectorized lax.scan trace simulator.
+- :mod:`sweep`         — batched multi-scenario sweep engine (vmap grids).
+- :mod:`refsim`        — event-driven reference (test oracle).
+- :mod:`trace`         — trace schema.
 """
-from .delay_stats import (det_mean, det_var, stoch_mean, stoch_std, stoch_var)
+from .delay_stats import (agg_mean_from_moments, agg_var_from_moments,
+                          det_mean, det_var, stoch_mean, stoch_std, stoch_var)
+from .distributions import (DISTRIBUTIONS, Deterministic, Erlang, Exponential,
+                            Hyperexponential, MissLatency, MonteCarlo,
+                            make_distribution)
 from .ranking import BASELINES, OURS, POLICIES, Policy, PolicyParams
 from .simulator import SimResult, latency_improvement, simulate
+from .sweep import SweepGrid, sweep_grid
 from .trace import Trace, make_trace
 
 __all__ = [
+    "agg_mean_from_moments", "agg_var_from_moments",
     "det_mean", "det_var", "stoch_mean", "stoch_std", "stoch_var",
+    "DISTRIBUTIONS", "Deterministic", "Erlang", "Exponential",
+    "Hyperexponential", "MissLatency", "MonteCarlo", "make_distribution",
     "BASELINES", "OURS", "POLICIES", "Policy", "PolicyParams",
-    "SimResult", "latency_improvement", "simulate", "Trace", "make_trace",
+    "SimResult", "latency_improvement", "simulate",
+    "SweepGrid", "sweep_grid", "Trace", "make_trace",
 ]

@@ -22,6 +22,8 @@ __all__ = [
     "stoch_mean",
     "stoch_var",
     "stoch_std",
+    "agg_mean_from_moments",
+    "agg_var_from_moments",
     "mc_aggregate_delay",
     "mc_moments",
 ]
@@ -67,6 +69,28 @@ def stoch_std(lam, z):
 
 
 # ---------------------------------------------------------------------------
+# Generalization to arbitrary fetch-time laws (repro.core.distributions):
+# conditional on Z, D = Z + compound-Poisson(lambda Z) of U[0, Z) residuals:
+#   E[D | Z]   = Z + lambda Z^2 / 2
+#   Var[D | Z] = lambda Z^3 / 3
+# so with m_k = E[Z^k], total expectation/variance give closed forms in the
+# first four raw moments alone.  Theorems 1/2 are the m_k = z^k and
+# m_k = k! z^k specializations (verified exactly in tests/test_distributions).
+# ---------------------------------------------------------------------------
+def agg_mean_from_moments(lam, m1, m2):
+    """E[D] from the first two raw moments of the fetch time Z."""
+    return m1 + 0.5 * lam * m2
+
+
+def agg_var_from_moments(lam, m1, m2, m3, m4):
+    """Var[D] from the first four raw moments of the fetch time Z."""
+    return (lam * m3 / 3.0                      # E[Var[D|Z]]
+            + (m2 - m1 * m1)                    # Var[Z]
+            + lam * (m3 - m1 * m2)              # lambda * Cov(Z, Z^2)
+            + 0.25 * lam * lam * (m4 - m2 * m2))  # (lam/2)^2 * Var[Z^2]
+
+
+# ---------------------------------------------------------------------------
 # Monte-Carlo oracle.
 #
 # One sample of D: draw Z (either deterministic or Exp(1/z)); draw
@@ -75,14 +99,20 @@ def stoch_std(lam, z):
 # So D = Z + sum_{j<K} (Z - U_j) = Z + sum_j V_j with V_j ~ U[0, Z).
 # ---------------------------------------------------------------------------
 def mc_aggregate_delay(key: jax.Array, lam: float, z: float, n: int,
-                       stochastic: bool = True, max_k: int = 512) -> jax.Array:
+                       stochastic: bool = True, max_k: int = 512,
+                       sampler=None) -> jax.Array:
     """Draw ``n`` iid samples of the aggregate delay D.
 
-    ``max_k`` truncates the Poisson count; with lam*z <= 32 the truncation mass
-    at 512 is < 1e-200, i.e. irrelevant for the tests.
+    ``sampler(key, shape) -> unit-mean draws`` selects the fetch-time law
+    (e.g. ``dist.sample_unit`` from :mod:`repro.core.distributions`);
+    ``stochastic`` keeps the legacy Deterministic/Exponential switch.
+    ``max_k`` truncates the Poisson count; with lam*z <= 32 the truncation
+    mass at 512 is < 1e-200, i.e. irrelevant for the tests.
     """
     kz, kk, ku = jax.random.split(key, 3)
-    if stochastic:
+    if sampler is not None:
+        Z = sampler(kz, (n,)) * z
+    elif stochastic:
         Z = jax.random.exponential(kz, (n,)) * z
     else:
         Z = jnp.full((n,), z)
@@ -95,7 +125,9 @@ def mc_aggregate_delay(key: jax.Array, lam: float, z: float, n: int,
 
 
 def mc_moments(key: jax.Array, lam: float, z: float, n: int,
-               stochastic: bool = True) -> tuple[jax.Array, jax.Array]:
+               stochastic: bool = True,
+               sampler=None) -> tuple[jax.Array, jax.Array]:
     """Monte-Carlo (mean, variance) of D with ``n`` samples."""
-    d = mc_aggregate_delay(key, lam, z, n, stochastic=stochastic)
+    d = mc_aggregate_delay(key, lam, z, n, stochastic=stochastic,
+                           sampler=sampler)
     return d.mean(), d.var(ddof=1)

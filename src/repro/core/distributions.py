@@ -1,0 +1,291 @@
+"""Pluggable miss-latency distributions for the delayed-hit analysis.
+
+The paper proves Theorem 2 for exponentially distributed fetch latency and
+its predecessor VA-CDH covers the deterministic case.  Both are instances of
+one identity: conditional on the fetch time ``Z``, the aggregate delay is
+
+    D = Z + sum_{j<K} V_j,   K ~ Poisson(lambda * Z),  V_j ~ U[0, Z)
+
+(a compound-Poisson of uniform residuals, paper §3.1), so by the laws of
+total expectation/variance the aggregate moments depend on ``Z`` only through
+its first four raw moments ``m_k = E[Z^k]``:
+
+    E[D]   = m1 + (lambda/2) m2
+    Var[D] = (lambda/3) m3                      # E[Var[D|Z]]
+           + (m2 - m1^2)                        # Var[Z]
+           + lambda (m3 - m1 m2)                # lambda Cov(Z, Z^2)
+           + (lambda^2/4)(m4 - m2^2)            # (lambda^2/4) Var[Z^2]
+
+Substituting ``m_k = z^k`` recovers Theorem 1 exactly; ``m_k = k! z^k``
+recovers Theorem 2 (eq. 6/7).  This module exposes that generalization as a
+family of distribution objects, each parameterized as a *unit-mean shape*
+scaled by the per-object mean latency ``z`` — so one distribution instance
+serves the whole object universe.  ``Deterministic`` and ``Exponential``
+delegate to the closed forms in :mod:`repro.core.delay_stats` (bit-identical
+to the theorems); ``Erlang`` and ``Hyperexponential`` use the generic moment
+formulas; ``MonteCarlo`` estimates the shape moments from an arbitrary
+sampler, covering shapes with no analytic form (see DESIGN.md §3).
+
+Every class is a frozen dataclass registered as a JAX pytree whose numeric
+parameters are leaves, so distributions ride inside ``PolicyParams`` through
+``jit``/``vmap`` (the sweep engine) without retracing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import delay_stats as ds
+
+__all__ = [
+    "MissLatency",
+    "Deterministic",
+    "Exponential",
+    "Erlang",
+    "Hyperexponential",
+    "MonteCarlo",
+    "DISTRIBUTIONS",
+    "make_distribution",
+]
+
+
+class MissLatency:
+    """Base class: a unit-mean fetch-latency shape, scaled per-object by z.
+
+    Subclasses implement :meth:`shape_moments` (the unit-mean raw moments
+    ``c_1..c_4`` with ``c_1 == 1``) and :meth:`sample_unit`.  Aggregate-delay
+    moments come from the compound-Poisson identity above; ``Deterministic``
+    and ``Exponential`` override them with the papers' closed forms.
+    """
+
+    name: str = "abstract"
+
+    # -- shape --------------------------------------------------------------
+    def shape_moments(self):
+        """Raw moments (c1, c2, c3, c4) of the unit-mean shape; c1 == 1."""
+        raise NotImplementedError
+
+    def sample_unit(self, key: jax.Array, shape) -> jax.Array:
+        """Draw unit-mean fetch-time realizations."""
+        raise NotImplementedError
+
+    # -- derived ------------------------------------------------------------
+    def raw_moments(self, z):
+        """Raw moments (m1..m4) of Z for per-object mean latency ``z``."""
+        z = jnp.asarray(z)
+        c1, c2, c3, c4 = self.shape_moments()
+        z2 = z * z
+        return c1 * z, c2 * z2, c3 * z2 * z, c4 * z2 * z2
+
+    def latency_var(self, z):
+        """Variance of the fetch time itself: Var[Z]."""
+        m1, m2, _, _ = self.raw_moments(z)
+        return m2 - m1 * m1
+
+    def agg_mean(self, lam, z):
+        """E[D]: mean aggregate delay at arrival rate ``lam``, mean ``z``."""
+        m1, m2, _, _ = self.raw_moments(z)
+        return ds.agg_mean_from_moments(jnp.asarray(lam), m1, m2)
+
+    def agg_var(self, lam, z):
+        """Var[D]: variance of the aggregate delay."""
+        m1, m2, m3, m4 = self.raw_moments(z)
+        return ds.agg_var_from_moments(jnp.asarray(lam), m1, m2, m3, m4)
+
+    def agg_std(self, lam, z):
+        return jnp.sqrt(self.agg_var(lam, z))
+
+    def sample(self, key: jax.Array, z) -> jax.Array:
+        """Realized fetch times with per-draw means ``z`` (broadcasts)."""
+        z = jnp.asarray(z, jnp.float32)
+        return z * self.sample_unit(key, z.shape)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Deterministic(MissLatency):
+    """Z == z surely — VA-CDH's setting; Theorem 1 closed forms."""
+
+    name = "deterministic"
+
+    def shape_moments(self):
+        return (1.0, 1.0, 1.0, 1.0)
+
+    def sample_unit(self, key, shape):
+        return jnp.ones(shape, jnp.float32)
+
+    def agg_mean(self, lam, z):
+        return ds.det_mean(lam, z)
+
+    def agg_var(self, lam, z):
+        return ds.det_var(lam, z)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Exponential(MissLatency):
+    """Z ~ Exp(1/z) — the paper's setting; Theorem 2 closed forms."""
+
+    name = "exponential"
+
+    def shape_moments(self):
+        return (1.0, 2.0, 6.0, 24.0)
+
+    def sample_unit(self, key, shape):
+        return jax.random.exponential(key, shape, jnp.float32)
+
+    def agg_mean(self, lam, z):
+        return ds.stoch_mean(lam, z)
+
+    def agg_var(self, lam, z):
+        return ds.stoch_var(lam, z)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Erlang(MissLatency):
+    """Z ~ Erlang(k, rate k/z): unit-mean Gamma with shape ``k``.
+
+    Interpolates between Exponential (k=1) and Deterministic (k -> inf):
+    squared coefficient of variation 1/k.  Models multi-stage fetch paths
+    (k serial hops each ~Exp), cf. the phase-type latencies in the TTL
+    network-delay analysis (arXiv:2201.11577).  ``k`` is a pytree *leaf*,
+    so a k-grid — including k=1, which reproduces the paper's Exponential
+    setting through the generic moment formulas — sweeps through one
+    compiled graph.
+    """
+
+    k: float = 2.0
+
+    name = "erlang"
+
+    def shape_moments(self):
+        k = jnp.asarray(self.k, jnp.float32)
+        return (jnp.asarray(1.0, jnp.float32),
+                (k + 1.0) / k,
+                (k + 1.0) * (k + 2.0) / (k * k),
+                (k + 1.0) * (k + 2.0) * (k + 3.0) / (k * k * k))
+
+    def sample_unit(self, key, shape):
+        k = jnp.asarray(self.k, jnp.float32)
+        return jax.random.gamma(key, k, shape, jnp.float32) / k
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Hyperexponential(MissLatency):
+    """Two-branch mixture of exponentials, normalized to unit mean.
+
+    With probability ``p`` the fetch is "fast" (mean ``mu_fast``), else
+    "slow" (mean scaled so the mixture mean is 1).  Squared coefficient of
+    variation > 1: models bimodal fetch paths (edge hit vs origin miss).
+    """
+
+    p: float = 0.9
+    mu_fast: float = 0.5
+
+    name = "hyperexp"
+
+    def __post_init__(self):
+        # Validate only concrete parameters — pytree unflattening inside
+        # jit/vmap reconstructs with tracers, which must pass through.
+        if isinstance(self.p, (int, float)) and \
+                isinstance(self.mu_fast, (int, float)):
+            if not 0.0 <= self.p < 1.0:
+                raise ValueError(f"p={self.p} must be in [0, 1)")
+            if self.mu_fast <= 0.0 or self.p * self.mu_fast >= 1.0:
+                raise ValueError(
+                    f"p*mu_fast={self.p * self.mu_fast} must be < 1 (and "
+                    f"mu_fast > 0) for a positive unit-mean slow branch")
+
+    def _branches(self):
+        p = jnp.asarray(self.p)
+        mu1 = jnp.asarray(self.mu_fast)
+        # solve p*mu1 + (1-p)*mu2 == 1 for the slow branch mean
+        mu2 = (1.0 - p * mu1) / jnp.maximum(1.0 - p, 1e-9)
+        return p, mu1, mu2
+
+    def shape_moments(self):
+        p, mu1, mu2 = self._branches()
+        mix = lambda f1, f2: p * f1 + (1.0 - p) * f2
+        return (mix(mu1, mu2),
+                2.0 * mix(mu1**2, mu2**2),
+                6.0 * mix(mu1**3, mu2**3),
+                24.0 * mix(mu1**4, mu2**4))
+
+    def sample_unit(self, key, shape):
+        kb, ke = jax.random.split(key)
+        p, mu1, mu2 = self._branches()
+        mu = jnp.where(jax.random.uniform(kb, shape) < p, mu1, mu2)
+        return mu * jax.random.exponential(ke, shape, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class MonteCarlo(MissLatency):
+    """Arbitrary shape: moments estimated once from a user sampler.
+
+    ``sampler(key, shape) -> draws`` may have any positive distribution; the
+    draws are renormalized to unit mean and the shape moments c1..c4 are the
+    empirical moments of ``n_est`` draws.  Everything downstream (ranking,
+    analytics) then runs through the same generic formulas as the analytic
+    shapes — the Monte-Carlo fallback of DESIGN.md §3.
+
+    ``moments``/``unit_scale`` are derived at construction; passing them
+    explicitly (as pytree unflatten does) skips the estimation pass.
+    """
+
+    sampler: Callable[[jax.Array, tuple], jax.Array]
+    n_est: int = 200_000
+    est_seed: int = 0
+    moments: tuple | None = None
+    unit_scale: float | None = None
+
+    name = "monte_carlo"
+
+    def __post_init__(self):
+        if self.moments is not None:
+            return
+        draws = jnp.asarray(
+            self.sampler(jax.random.key(self.est_seed), (self.n_est,)),
+            jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+        mean = float(jnp.maximum(draws.mean(), 1e-12))
+        u = draws / mean
+        object.__setattr__(self, "moments", tuple(
+            float((u ** k).mean()) for k in (1, 2, 3, 4)))
+        object.__setattr__(self, "unit_scale", mean)
+
+    def shape_moments(self):
+        return self.moments
+
+    def sample_unit(self, key, shape):
+        return jnp.asarray(self.sampler(key, shape),
+                           jnp.float32) / self.unit_scale
+
+
+# All MonteCarlo fields are static metadata (hashable floats/callable), so
+# instances flatten to zero leaves and reconstruct without re-estimating.
+jax.tree_util.register_dataclass(
+    MonteCarlo, data_fields=[],
+    meta_fields=["sampler", "n_est", "est_seed", "moments", "unit_scale"])
+
+
+# Registry for config-by-name construction (benchmark CLIs, specs).
+DISTRIBUTIONS: dict[str, Callable[..., MissLatency]] = {
+    "deterministic": Deterministic,
+    "exponential": Exponential,
+    "erlang": Erlang,
+    "hyperexp": Hyperexponential,
+}
+
+
+def make_distribution(name: str, **kwargs) -> MissLatency:
+    """Construct a distribution from its registry name (e.g. ``erlang``)."""
+    try:
+        return DISTRIBUTIONS[name](**kwargs)
+    except KeyError:
+        raise ValueError(
+            f"unknown miss-latency distribution {name!r}; "
+            f"known: {sorted(DISTRIBUTIONS)}") from None

@@ -19,9 +19,14 @@ import jax
 import jax.numpy as jnp
 
 from . import delay_stats as ds
+from .distributions import Deterministic, Exponential, MissLatency
 from .state import ObjStats
 
 EPS = 1e-6
+
+# The deterministic-latency moment model assumed by the VA-CDH / LAC / CALA
+# baselines (their published setting), independent of the trace's true law.
+_DET = Deterministic()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,18 +45,34 @@ class PolicyParams:
                  mean-based estimate.
     adapt_c    — AdaptSize admission scale (admit w.p. exp(-size/adapt_c)).
     cold_rate  — arrival-rate prior for objects with <2 observations.
+    dist       — miss-latency distribution assumed by the variance-aware
+                 ranking (repro.core.distributions).  Exponential() makes
+                 rank_stochastic_vacdh exactly the paper's eq. 16; Erlang /
+                 Hyperexponential generalize it beyond both papers.
 
-    Registered as a JAX pytree (float fields are leaves; window/resid are
-    static metadata) so hyperparameter sweeps (fig4) trace once.
+    Registered as a JAX pytree (numeric fields are leaves — including the
+    window length and the distribution's parameters — so the sweep engine
+    (core/sweep.py) vmaps whole hyperparameter grids through one trace;
+    only ``resid`` and the distribution's *type* are static metadata).
     """
 
     omega: float = 1.0
     cala_beta: float = 0.5
     adapt_c: float = 25.0
     cold_rate: float = 1e-3
-    window: int = dataclasses.field(default=64, metadata=dict(static=True))
-    resid: str = dataclasses.field(default="recency",
-                                   metadata=dict(static=True))
+    window: int = 64
+    resid: dataclasses.InitVar[str] = "recency"
+    dist: MissLatency = Exponential()
+    # Derived from ``resid`` ('rate' -> 1.0, 'recency' -> 0.0); a traced
+    # leaf so the residual-estimator ablation shares one compiled graph.
+    resid_rate: float | None = None
+
+    def __post_init__(self, resid):
+        if self.resid_rate is None:
+            if resid not in ("rate", "recency"):
+                raise ValueError(f"unknown residual estimator {resid!r}")
+            object.__setattr__(self, "resid_rate",
+                               1.0 if resid == "rate" else 0.0)
 
     @property
     def gap_alpha(self) -> float:
@@ -60,8 +81,9 @@ class PolicyParams:
 
 jax.tree_util.register_dataclass(
     PolicyParams,
-    data_fields=["omega", "cala_beta", "adapt_c", "cold_rate"],
-    meta_fields=["window", "resid"])
+    data_fields=["omega", "cala_beta", "adapt_c", "cold_rate", "window",
+                 "dist", "resid_rate"],
+    meta_fields=[])
 
 
 # ---------------------------------------------------------------------------
@@ -81,11 +103,15 @@ def residual_hat(o: ObjStats, t: jax.Array,
     and the paper use ("R_i ... using LRU", §4); the paper-faithful setting.
     'rate' (1/lambda_hat — the memoryless MLE for Poisson) is this repo's
     beyond-paper improvement: it lifts the whole ranking family by ~8pp on
-    synthetic workloads (EXPERIMENTS.md §Beyond)."""
-    if p is not None and p.resid == "recency":
-        return jnp.maximum(t - o.last_access, EPS)
-    lam = lambda_hat(o, p or PolicyParams())
-    return 1.0 / jnp.maximum(lam, EPS)
+    synthetic workloads (EXPERIMENTS.md §Beyond).  The selector
+    ``p.resid_rate`` is a traced leaf (both estimators are a handful of
+    N-vector ops), so 'rate' vs 'recency' can ride a sweep-engine lane axis.
+    Calling with ``p=None`` keeps the legacy rate-estimator behavior."""
+    if p is None:
+        return 1.0 / jnp.maximum(lambda_hat(o, PolicyParams()), EPS)
+    rate_r = 1.0 / jnp.maximum(lambda_hat(o, p), EPS)
+    recency_r = jnp.maximum(t - o.last_access, EPS)
+    return jnp.where(jnp.asarray(p.resid_rate) > 0.5, rate_r, recency_r)
 
 
 def agg_mean_hat(o: ObjStats) -> jax.Array:
@@ -144,7 +170,7 @@ def rank_lac(o, sizes, t, p):
     """LAC: mean aggregate delay under *deterministic* latency, per byte and
     per unit residual time (variance-blind; omega = 0)."""
     lam = lambda_hat(o, p)
-    e = ds.det_mean(lam, o.z_est)
+    e = _DET.agg_mean(lam, o.z_est)
     return e / (residual_hat(o, t, p) * jnp.maximum(sizes, EPS))
 
 
@@ -152,7 +178,7 @@ def rank_cala(o, sizes, t, p):
     """CALA: weighted blend of historical AggDelay and the analytic estimate
     (balances imprecise averages vs conservative bounds, per §1)."""
     lam = lambda_hat(o, p)
-    analytic = ds.det_mean(lam, o.z_est)
+    analytic = _DET.agg_mean(lam, o.z_est)
     est = p.cala_beta * agg_mean_hat(o) + (1.0 - p.cala_beta) * analytic
     return est / (residual_hat(o, t, p) * jnp.maximum(sizes, EPS))
 
@@ -160,16 +186,21 @@ def rank_cala(o, sizes, t, p):
 def rank_vacdh(o, sizes, t, p):
     """VA-CDH [16]: eq. 15 with Theorem 1 (deterministic-latency) moments."""
     lam = lambda_hat(o, p)
-    e = ds.det_mean(lam, o.z_est)
-    s = jnp.sqrt(ds.det_var(lam, o.z_est))
+    e = _DET.agg_mean(lam, o.z_est)
+    s = _DET.agg_std(lam, o.z_est)
     return (e + p.omega * s) / (residual_hat(o, t, p) * jnp.maximum(sizes, EPS))
 
 
 def rank_stochastic_vacdh(o, sizes, t, p):
-    """THE PAPER: eq. 16 — Theorem 2 moments for Exp-distributed latency."""
+    """THE PAPER, generalized: eq. 16 with the moments of ``p.dist``.
+
+    With the default ``dist=Exponential()`` this is bit-for-bit the paper's
+    eq. 16 (Theorem-2 closed forms); Erlang / Hyperexponential / MonteCarlo
+    swap in their aggregate-delay moments via the same compound-Poisson
+    identity (DESIGN.md §3)."""
     lam = lambda_hat(o, p)
-    e = ds.stoch_mean(lam, o.z_est)
-    s = ds.stoch_std(lam, o.z_est)
+    e = p.dist.agg_mean(lam, o.z_est)
+    s = p.dist.agg_std(lam, o.z_est)
     return (e + p.omega * s) / (residual_hat(o, t, p) * jnp.maximum(sizes, EPS))
 
 

@@ -10,6 +10,12 @@ event-driven simulation (verified against :mod:`repro.core.refsim`).
 Eviction follows the paper's §2.2 semantics: evict the lowest-ranked cached
 object while its rank is strictly below the incoming object's rank; if space
 still cannot be freed, the incoming object is not admitted.
+
+The per-commit scoring hot path can run through the fused Pallas kernel
+(:mod:`repro.kernels.ranking_score`) via ``use_kernel`` — compiled on TPU,
+interpret-mode or the jnp reference on CPU (DESIGN.md §3).  The unjitted
+:func:`_simulate_impl` is the composition point for :mod:`repro.core.sweep`,
+which vmaps it over whole hyperparameter grids.
 """
 from __future__ import annotations
 
@@ -19,11 +25,105 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .ranking import POLICIES, Policy, PolicyParams
-from .state import SimState, init_state, kahan_add
+import numpy as np
+
+from .distributions import Exponential
+from .ranking import (POLICIES, Policy, PolicyParams, lambda_hat,
+                      rank_stochastic_vacdh, residual_hat)
+from .state import SimState, init_state, kahan_add, onehot_add, onehot_set
 from .trace import Trace
 
 _EPS = 1e-6
+
+# Scoring backends for the commit-time ranking pass (static per simulation):
+#   'rank'             — the policy's jnp rank function (default)
+#   'kernel'           — fused Pallas kernel, compiled (TPU)
+#   'kernel_interpret' — fused Pallas kernel, interpret mode (any backend)
+#   'ref'              — kernels.ref jnp oracle (CPU fallback, same math)
+_SCORE_MODES = ("rank", "kernel", "kernel_interpret", "ref")
+
+
+def _sel(flag, a, b):
+    """Flag-select that constant-folds python bools at trace time.
+
+    Policy behavior (GreedyDual upkeep, AdaptSize admission, rank-compare
+    eviction) is expressed through this so ONE simulation body serves both
+    the static per-policy path (flags are python bools — the graph is
+    exactly the specialized one) and the sweep engine's multi-policy path
+    (flags are per-lane traced scalars indexed by a policy id)."""
+    if isinstance(flag, (bool, np.bool_)):
+        return a if flag else b
+    return jnp.where(flag, a, b)
+
+
+class _Behavior(NamedTuple):
+    """How one simulation lane ranks, admits, and writes — possibly traced.
+
+    ``score(o, sizes, t) -> [N]`` closes over the policy/params;
+    ``greedydual``/``gd_rate``/``adaptsize``/``compare_admission`` mirror
+    :class:`repro.core.ranking.Policy` flags, as python bools (static path)
+    or traced 0-d bools (multi-policy path).  Two fields are always
+    python-static:
+
+    ``split_key`` — whether the admission coin stream is advanced every
+    commit (always True in multi mode so lanes stay in lockstep; only
+    AdaptSize consumes the coin either way).
+
+    ``onehot`` — state-update lowering.  Point updates are O(1) scatters in
+    unbatched graphs (cheapest at large N) and O(N) one-hot selects when
+    the graph will be vmapped (batched scatters with lane-varying indices
+    loop on XLA:CPU; selects stay elementwise).  Both write bit-identical
+    states, so the choice never shows up in results (tests/test_sweep.py).
+    """
+
+    score: object
+    greedydual: object
+    gd_rate: object
+    adaptsize: object
+    compare_admission: object
+    split_key: bool
+    onehot: bool
+
+    # --- state writes (see ``onehot``) -----------------------------------
+    def set_at(self, x, j, jhot, val):
+        return onehot_set(x, jhot, val) if self.onehot else x.at[j].set(val)
+
+    def add_at(self, x, j, jhot, val):
+        return onehot_add(x, jhot, val) if self.onehot else x.at[j].add(val)
+
+
+def _behavior_static(policy: Policy, p: PolicyParams, score_mode: str,
+                     onehot: bool = False) -> _Behavior:
+    return _Behavior(
+        score=lambda o, sizes, t: _score(policy, p, score_mode, o, sizes, t),
+        greedydual=policy.greedydual,
+        gd_rate=policy.gd_cost == "agg_rate",
+        adaptsize=policy.admission == "adaptsize",
+        compare_admission=policy.compare_admission,
+        split_key=policy.admission == "adaptsize",
+        onehot=onehot)
+
+
+def _behavior_multi(policy_names: tuple, policy_idx,
+                    p: PolicyParams) -> _Behavior:
+    """One lane of the unified multi-policy graph: every registered rank
+    function is evaluated (cheap — a few N-vector ops each) and the lane's
+    traced ``policy_idx`` gathers its row; behavior flags come from constant
+    lookup tables indexed the same way."""
+    pols = [POLICIES[n] for n in policy_names]
+    flag = lambda f: jnp.asarray(np.array([f(q) for q in pols]))[policy_idx]
+
+    def score(o, sizes, t):
+        return jnp.stack([q.rank(o, sizes, t, p) for q in pols])[policy_idx]
+
+    return _Behavior(
+        score=score,
+        greedydual=flag(lambda q: q.greedydual),
+        gd_rate=flag(lambda q: q.gd_cost == "agg_rate"),
+        adaptsize=flag(lambda q: q.admission == "adaptsize"),
+        compare_admission=flag(lambda q: q.compare_admission),
+        split_key=True,
+        onehot=True)
 
 
 class SimResult(NamedTuple):
@@ -46,55 +146,77 @@ class SimResult(NamedTuple):
         return self.n_hits / jnp.maximum(self.n_requests, 1.0)
 
 
-def _gd_cost(policy: Policy, o, sizes, p: PolicyParams):
+def _gd_cost(b: _Behavior, o, sizes, p: PolicyParams):
     """GreedyDual cost term (MAD-style aggregate-delay costs)."""
-    from .ranking import agg_mean_hat, lambda_hat
+    from .ranking import agg_mean_hat
 
     cost = agg_mean_hat(o)
-    if policy.gd_cost == "agg_rate":
-        cost = cost * lambda_hat(o, p)
+    cost = _sel(b.gd_rate, cost * lambda_hat(o, p), cost)
     return cost / jnp.maximum(sizes, _EPS)
 
 
-def _commit_one(policy: Policy, p: PolicyParams, estimate_z: bool,
+def _score(policy: Policy, p: PolicyParams, score_mode: str, o, sizes, t):
+    """Rank the whole object table at time ``t`` (the commit hot path)."""
+    if score_mode == "rank" or policy.rank is not rank_stochastic_vacdh \
+            or not isinstance(p.dist, Exponential):
+        # Kernel hard-codes Theorem-2 (Exponential) moments; everything else
+        # goes through the policy's jnp rank function.
+        return policy.rank(o, sizes, t, p)
+    lam = lambda_hat(o, p)
+    r = residual_hat(o, t, p)
+    if score_mode == "ref":
+        from repro.kernels.ref import ranking_scores_ref
+        ranks, _, _ = ranking_scores_ref(lam, o.z_est, r, sizes, o.cached,
+                                         p.omega)
+    else:
+        from repro.kernels.ranking_score import ranking_scores
+        ranks, _, _ = ranking_scores(
+            lam, o.z_est, r, sizes, o.cached, omega=p.omega,
+            interpret=(score_mode == "kernel_interpret"))
+    return ranks
+
+
+def _commit_one(b: _Behavior, p: PolicyParams, estimate_z: bool,
                 state: SimState, sizes: jax.Array) -> SimState:
     """Commit the earliest completed outstanding fetch (admission+eviction)."""
     o = state.obj
     done_t = jnp.where(o.in_flight, o.complete_t, jnp.inf)
     j = jnp.argmin(done_t)
+    jhot = jnp.arange(sizes.shape[0]) == j
     t_c = o.complete_t[j]
     realized = t_c - o.issue_t[j]
     ep = o.episode_delay[j]
 
     # --- finalize the miss episode's statistics -------------------------
     o = o._replace(
-        agg_sum=o.agg_sum.at[j].add(ep),
-        agg_sq_sum=o.agg_sq_sum.at[j].add(ep * ep),
-        agg_cnt=o.agg_cnt.at[j].add(1.0),
-        episode_delay=o.episode_delay.at[j].set(0.0),
-        in_flight=o.in_flight.at[j].set(False),
-        complete_t=o.complete_t.at[j].set(jnp.inf),
+        agg_sum=b.add_at(o.agg_sum, j, jhot, ep),
+        agg_sq_sum=b.add_at(o.agg_sq_sum, j, jhot, ep * ep),
+        agg_cnt=b.add_at(o.agg_cnt, j, jhot, 1.0),
+        episode_delay=b.set_at(o.episode_delay, j, jhot, 0.0),
+        in_flight=b.set_at(o.in_flight, j, jhot, False),
+        complete_t=b.set_at(o.complete_t, j, jhot, jnp.inf),
     )
     if estimate_z:
         znew = 0.7 * o.z_est[j] + 0.3 * realized
-        o = o._replace(z_est=o.z_est.at[j].set(znew))
+        o = o._replace(z_est=b.set_at(o.z_est, j, jhot, znew))
     min_complete = jnp.min(jnp.where(o.in_flight, o.complete_t, jnp.inf))
 
     # --- admission coin (AdaptSize) --------------------------------------
     key = state.key
-    if policy.admission == "adaptsize":
+    if b.split_key:
         key, sub = jax.random.split(key)
         p_admit = jnp.exp(-sizes[j] / p.adapt_c)
-        admit_ok = jax.random.uniform(sub) < p_admit
+        admit_ok = _sel(b.adaptsize, jax.random.uniform(sub) < p_admit,
+                        jnp.asarray(True))
     else:
         admit_ok = jnp.asarray(True)
 
     # --- rank everything at the exact completion time --------------------
     gd_clock = state.gd_clock
-    if policy.greedydual:
-        hj = gd_clock + _gd_cost(policy, o, sizes, p)[j]
-        o = o._replace(gd_h=o.gd_h.at[j].set(hj))
-    ranks = policy.rank(o, sizes, t_c, p)
+    hj = gd_clock + _gd_cost(b, o, sizes, p)[j]
+    o = o._replace(gd_h=b.set_at(o.gd_h, j, jhot,
+                                 _sel(b.greedydual, hj, o.gd_h[j])))
+    ranks = b.score(o, sizes, t_c)
     rank_j = ranks[j]
     s_j = sizes[j]
 
@@ -107,19 +229,26 @@ def _commit_one(policy: Policy, p: PolicyParams, estimate_z: bool,
         cached, free, clock, ok, nev = carry
         vr = jnp.where(cached, ranks, jnp.inf)
         v = jnp.argmin(vr)
-        can = (vr[v] < rank_j) if policy.compare_admission else (vr[v] < jnp.inf)
-        cached = jnp.where(can, cached.at[v].set(False), cached)
+        can = vr[v] < _sel(b.compare_admission, rank_j, jnp.inf)
+        if b.onehot:
+            cached = jnp.where(can & (jnp.arange(sizes.shape[0]) == v),
+                               False, cached)
+        else:
+            cached = jnp.where(can, cached.at[v].set(False), cached)
         free = jnp.where(can, free + sizes[v], free)
         nev = jnp.where(can, nev + 1.0, nev)
-        if policy.greedydual:
-            clock = jnp.where(can, jnp.maximum(clock, vr[v]), clock)
+        clock = _sel(b.greedydual,
+                     jnp.where(can, jnp.maximum(clock, vr[v]), clock), clock)
         return cached, free, clock, can, nev
 
     cached, free, gd_clock, fit_ok, n_ev = jax.lax.while_loop(
         cond, body, (o.cached, state.free, gd_clock, admit_ok, state.n_evictions))
 
     do_admit = admit_ok & fit_ok & (free >= s_j)
-    cached = jnp.where(do_admit, cached.at[j].set(True), cached)
+    if b.onehot:
+        cached = jnp.where(do_admit & jhot, True, cached)
+    else:
+        cached = jnp.where(do_admit, cached.at[j].set(True), cached)
     free = jnp.where(do_admit, free - s_j, free)
     o = o._replace(cached=cached)
 
@@ -128,10 +257,11 @@ def _commit_one(policy: Policy, p: PolicyParams, estimate_z: bool,
                           n_evictions=n_ev)
 
 
-def _serve(policy: Policy, p: PolicyParams, state: SimState,
+def _serve(b: _Behavior, p: PolicyParams, state: SimState,
            sizes: jax.Array, t, i, z_realized) -> SimState:
     """Serve the request (t, i); z_realized is used only if it's a miss."""
     o = state.obj
+    ihot = jnp.arange(sizes.shape[0]) == i
     is_hit = o.cached[i]
     is_delayed = o.in_flight[i]
     is_miss = ~(is_hit | is_delayed)
@@ -142,10 +272,12 @@ def _serve(policy: Policy, p: PolicyParams, state: SimState,
     # --- miss: issue fetch ------------------------------------------------
     comp = jnp.where(is_miss, t + z_realized, o.complete_t[i])
     o = o._replace(
-        in_flight=o.in_flight.at[i].set(is_miss | o.in_flight[i]),
-        complete_t=o.complete_t.at[i].set(comp),
-        issue_t=o.issue_t.at[i].set(jnp.where(is_miss, t, o.issue_t[i])),
-        episode_delay=o.episode_delay.at[i].set(
+        in_flight=b.set_at(o.in_flight, i, ihot, is_miss | o.in_flight[i]),
+        complete_t=b.set_at(o.complete_t, i, ihot, comp),
+        issue_t=b.set_at(o.issue_t, i, ihot,
+                         jnp.where(is_miss, t, o.issue_t[i])),
+        episode_delay=b.set_at(
+            o.episode_delay, i, ihot,
             jnp.where(is_miss, z_realized,
                       o.episode_delay[i] + jnp.where(is_delayed, lat, 0.0))),
     )
@@ -161,15 +293,16 @@ def _serve(policy: Policy, p: PolicyParams, state: SimState,
                    jnp.where(cnt == 1.0, gap,
                              o.gap_mean[i] + a_eff * (gap - o.gap_mean[i])))
     o = o._replace(
-        gap_mean=o.gap_mean.at[i].set(gm),
-        first_access=o.first_access.at[i].set(
-            jnp.where(cnt == 0.0, t, o.first_access[i])),
-        last_access=o.last_access.at[i].set(t),
-        count=o.count.at[i].set(cnt + 1.0),
+        gap_mean=b.set_at(o.gap_mean, i, ihot, gm),
+        first_access=b.set_at(o.first_access, i, ihot,
+                              jnp.where(cnt == 0.0, t, o.first_access[i])),
+        last_access=b.set_at(o.last_access, i, ihot, t),
+        count=b.set_at(o.count, i, ihot, cnt + 1.0),
     )
-    if policy.greedydual:
-        hi = state.gd_clock + _gd_cost(policy, o, sizes, p)[i]
-        o = o._replace(gd_h=o.gd_h.at[i].set(jnp.where(is_hit, hi, o.gd_h[i])))
+    hi = state.gd_clock + _gd_cost(b, o, sizes, p)[i]
+    o = o._replace(gd_h=b.set_at(
+        o.gd_h, i, ihot,
+        _sel(b.greedydual, jnp.where(is_hit, hi, o.gd_h[i]), o.gd_h[i])))
 
     lat_sum, lat_comp = kahan_add(state.lat_sum, state.lat_comp, lat)
     return state._replace(
@@ -181,10 +314,8 @@ def _serve(policy: Policy, p: PolicyParams, state: SimState,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("policy_name", "estimate_z"))
-def _simulate(trace: Trace, capacity, key, policy_name: str,
+def _run_scan(b: _Behavior, trace: Trace, capacity, key,
               params: PolicyParams, estimate_z: bool) -> SimResult:
-    policy = POLICIES[policy_name]
     state = init_state(trace.n_objects, capacity, key, trace.z_mean)
 
     def step(state: SimState, req):
@@ -194,10 +325,10 @@ def _simulate(trace: Trace, capacity, key, policy_name: str,
             return s.min_complete <= t
 
         def commit_body(s):
-            return _commit_one(policy, params, estimate_z, s, trace.sizes)
+            return _commit_one(b, params, estimate_z, s, trace.sizes)
 
         state = jax.lax.while_loop(commit_cond, commit_body, state)
-        state = _serve(policy, params, state, trace.sizes, t, i, z)
+        state = _serve(b, params, state, trace.sizes, t, i, z)
         return state, None
 
     state, _ = jax.lax.scan(
@@ -206,17 +337,65 @@ def _simulate(trace: Trace, capacity, key, policy_name: str,
                      state.n_misses, state.n_evictions)
 
 
+def _simulate_impl(trace: Trace, capacity, key, policy_name: str,
+                   params: PolicyParams, estimate_z: bool,
+                   score_mode: str = "rank",
+                   onehot: bool = False) -> SimResult:
+    """Unjitted single-policy simulation body (statically specialized).
+
+    ``onehot=True`` selects vmap-friendly state updates (set by the sweep
+    engine when the graph is actually batched)."""
+    b = _behavior_static(POLICIES[policy_name], params, score_mode, onehot)
+    return _run_scan(b, trace, capacity, key, params, estimate_z)
+
+
+def _simulate_multi_impl(trace: Trace, capacity, key, policy_idx,
+                         params: PolicyParams, policy_names: tuple,
+                         estimate_z: bool) -> SimResult:
+    """Unjitted multi-policy body: the policy is a traced lane index, so one
+    compiled graph serves a whole policies x hyperparameter grid
+    (:mod:`repro.core.sweep`)."""
+    b = _behavior_multi(policy_names, policy_idx, params)
+    return _run_scan(b, trace, capacity, key, params, estimate_z)
+
+
+_simulate = jax.jit(_simulate_impl,
+                    static_argnames=("policy_name", "estimate_z",
+                                     "score_mode"))
+
+
+def resolve_score_mode(use_kernel) -> str:
+    """Map the user-facing ``use_kernel`` flag to a static scoring backend.
+
+    False -> 'rank'; True -> compiled kernel on TPU, jnp ref oracle on CPU;
+    'interpret'/'ref'/'kernel' force a specific backend."""
+    if use_kernel is False or use_kernel is None:
+        return "rank"
+    if use_kernel is True:
+        return "kernel" if jax.default_backend() == "tpu" else "ref"
+    if use_kernel == "interpret":
+        return "kernel_interpret"
+    if use_kernel in _SCORE_MODES:
+        return use_kernel
+    raise ValueError(f"use_kernel={use_kernel!r}; expected bool, 'interpret', "
+                     f"or one of {_SCORE_MODES}")
+
+
 def simulate(trace: Trace, capacity: float, policy: str = "stoch_vacdh",
              params: PolicyParams | None = None, key=None,
-             estimate_z: bool = False) -> SimResult:
-    """Run one policy over a trace. ``params`` must be hashable-stable; it is
-    baked into the jit closure via its dataclass fields."""
+             estimate_z: bool = False, use_kernel=False) -> SimResult:
+    """Run one policy over a trace.
+
+    ``params`` rides through jit as a pytree (numeric fields traced — omega /
+    window / distribution-parameter sweeps don't retrace).  ``use_kernel``
+    routes the commit-time scoring pass through the fused Pallas kernel for
+    the eq.-16 policy (see :func:`resolve_score_mode`)."""
     if params is None:
         params = PolicyParams()
     if key is None:
         key = jax.random.key(0)
     return _simulate(trace, jnp.float32(capacity), key, policy, params,
-                     estimate_z)
+                     estimate_z, resolve_score_mode(use_kernel))
 
 
 def latency_improvement(trace: Trace, capacity: float, policy: str,

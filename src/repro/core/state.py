@@ -82,3 +82,20 @@ def kahan_add(total: jax.Array, comp: jax.Array, x: jax.Array):
     t = total + y
     comp = (t - total) - y
     return t, comp
+
+
+# ---------------------------------------------------------------------------
+# One-hot state updates.  ``x.at[i].set(v)`` lowers to a scatter whose
+# batched form (lane-varying indices under the sweep engine's vmap) XLA:CPU
+# executes as a per-lane loop; a masked select over the N-vector is a single
+# SIMD-friendly elementwise op in both the single-lane and batched cases,
+# and leaves untouched positions bit-identical.
+# ---------------------------------------------------------------------------
+def onehot_set(x: jax.Array, hot: jax.Array, val) -> jax.Array:
+    """x with position(s) where ``hot`` is True replaced by ``val``."""
+    return jnp.where(hot, val, x)
+
+
+def onehot_add(x: jax.Array, hot: jax.Array, val) -> jax.Array:
+    """x with ``val`` added at position(s) where ``hot`` is True."""
+    return jnp.where(hot, x + val, x)

@@ -1,0 +1,176 @@
+"""Batched multi-scenario sweep engine.
+
+The benchmarks' historical shape was one Python-level ``simulate`` call per
+(policy, omega, cache-size, seed) grid point — each a separate dispatch of a
+separately compiled scan.  This module runs the whole grid
+
+    traces x policies x PolicyParams x cache sizes x seeds
+
+through ONE jit-compiled call.  Two mechanisms make that possible:
+
+* numeric hyperparameters (omega, window, distribution parameters, the
+  residual-estimator switch) are pytree *leaves* of ``PolicyParams``, so a
+  stacked params grid vmaps without retracing;
+* the policy itself becomes a traced lane index: the unified simulation
+  body (``_simulate_multi_impl``) evaluates every requested rank function
+  (a few N-vector ops each) and gathers the lane's row, with behavior flags
+  (GreedyDual upkeep, AdaptSize admission, rank-compare eviction) selected
+  from constant tables.  XLA sees one graph for the whole policy set — the
+  per-policy compile that dominated benchmark wall-clock happens once.
+
+Per-lane arithmetic is untouched: a swept point is bit-for-bit identical to
+the corresponding :func:`repro.core.simulator.simulate` call (asserted by
+tests/test_sweep.py).  ``lane_bucket`` pads the flattened grid to a bucket
+multiple so differently-sized sweeps (an omega grid, then a window grid)
+reuse one compiled graph.
+
+The grid is flattened and vmapped once (trace broadcast, no per-lane trace
+copies), nested in an outer vmap over stacked traces when several
+identically-shaped traces are passed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .ranking import POLICIES, PolicyParams
+from .simulator import (SimResult, _simulate_impl, _simulate_multi_impl,
+                        resolve_score_mode)
+from .trace import Trace
+
+__all__ = ["SweepGrid", "sweep_grid"]
+
+
+class SweepGrid(NamedTuple):
+    """A swept result with its axis metadata.
+
+    ``result`` is a :class:`SimResult` whose fields are shaped
+    ``[n_traces, n_policies, n_params, n_capacities, n_seeds]``; the
+    remaining fields record the grid axes in order.
+    """
+
+    result: SimResult
+    policies: Sequence[str]
+    params: Sequence[PolicyParams]
+    capacities: jax.Array
+    seeds: Sequence[int]
+
+    def point(self, ti: int, li: int, pi: int, ci: int, si: int) -> SimResult:
+        """The SimResult of one grid point (host-side convenience)."""
+        return SimResult(*(f[ti, li, pi, ci, si] for f in self.result))
+
+
+def _stack(pytrees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *pytrees)
+
+
+@functools.partial(jax.jit, static_argnames=("policy_name", "estimate_z",
+                                             "score_mode", "onehot"))
+def _sweep_single(tstack, caps, keys, pstack, policy_name, estimate_z,
+                  score_mode, onehot):
+    def point(tr, c, k, pp):
+        return _simulate_impl(tr, c, k, policy_name, pp, estimate_z,
+                              score_mode, onehot)
+
+    inner = jax.vmap(point, in_axes=(None, 0, 0, 0))
+    return jax.vmap(lambda tr: inner(tr, caps, keys, pstack))(tstack)
+
+
+@functools.partial(jax.jit, static_argnames=("policy_names", "estimate_z"))
+def _sweep_multi(tstack, caps, keys, lidx, pstack, policy_names, estimate_z):
+    def point(tr, c, k, li, pp):
+        return _simulate_multi_impl(tr, c, k, li, pp, policy_names,
+                                    estimate_z)
+
+    inner = jax.vmap(point, in_axes=(None, 0, 0, 0, 0))
+    return jax.vmap(lambda tr: inner(tr, caps, keys, lidx, pstack))(tstack)
+
+
+def _bucket(n: int, bucket) -> int:
+    """Round ``n`` up to the next multiple of ``bucket`` (identity if unset)."""
+    if not bucket:
+        return n
+    return -(-n // bucket) * bucket
+
+
+def sweep_grid(traces, capacities, policies,
+               params=PolicyParams(), seeds=(0,),
+               estimate_z: bool = False, use_kernel=False,
+               lane_bucket: int | None = None) -> SweepGrid:
+    """Run the full scenario grid in one compiled call.
+
+    traces      — one :class:`Trace` or a sequence of identically-shaped
+                  traces (e.g. the same spec under different seeds).
+    capacities  — scalar or sequence of cache sizes.
+    policies    — one policy name (static specialization — supports
+                  ``use_kernel``) or a sequence of names (unified
+                  multi-policy graph; one compile for the whole set).
+    params      — one :class:`PolicyParams` or a sequence; all entries must
+                  share their static structure (distribution type).
+    seeds       — simulation PRNG seeds (admission coins etc.).
+    lane_bucket — pad the flattened grid up to this many lanes (repeats of
+                  lane 0, sliced off afterwards) so sweeps of different
+                  sizes share one compiled graph.
+
+    Returns a :class:`SweepGrid`; ``result`` fields are
+    ``[T, L, P, C, S]``-shaped.  Each point is bitwise identical to the
+    corresponding per-point :func:`simulate` call.
+    """
+    trace_list = [traces] if isinstance(traces, Trace) else list(traces)
+    single = isinstance(policies, str)
+    policy_names = (policies,) if single else tuple(policies)
+    unknown = [n for n in policy_names if n not in POLICIES]
+    if unknown:
+        raise ValueError(f"unknown policies {unknown}; known: "
+                         f"{sorted(POLICIES)}")
+    params_list = ([params] if isinstance(params, PolicyParams)
+                   else list(params))
+    caps = jnp.atleast_1d(jnp.asarray(capacities, jnp.float32))
+    seeds = [int(s) for s in jnp.atleast_1d(jnp.asarray(seeds))]
+
+    structs = {jax.tree.structure(p) for p in params_list}
+    if len(structs) != 1:
+        raise ValueError(
+            "all PolicyParams in a sweep must share static structure "
+            f"(distribution type); got {structs}")
+
+    tstack = _stack(trace_list)
+    pstack = _stack(params_list)
+
+    L, P, C, S = len(policy_names), len(params_list), caps.shape[0], len(seeds)
+    li, pi, ci, si = jnp.meshgrid(jnp.arange(L), jnp.arange(P),
+                                  jnp.arange(C), jnp.arange(S),
+                                  indexing="ij")
+    lflat = li.ravel()
+    pflat = jax.tree.map(lambda x: x[pi.ravel()], pstack)
+    cflat = caps[ci.ravel()]
+    keys = jnp.stack([jax.random.key(s) for s in seeds])
+    kflat = keys[si.ravel()]
+
+    G = L * P * C * S
+    Gpad = _bucket(G, lane_bucket)
+    if Gpad > G:
+        ext = lambda x: jnp.concatenate(
+            [x, jnp.broadcast_to(x[:1], (Gpad - G,) + x.shape[1:])])
+        lflat, cflat, kflat = ext(lflat), ext(cflat), ext(kflat)
+        pflat = jax.tree.map(ext, pflat)
+
+    if single:
+        # one-hot state updates only when the grid is actually batched —
+        # unbatched scatters are cheaper at large N (DESIGN.md §7)
+        res = _sweep_single(tstack, cflat, kflat, pflat, policy_names[0],
+                            estimate_z, resolve_score_mode(use_kernel),
+                            Gpad > 1)
+    else:
+        if resolve_score_mode(use_kernel) != "rank":
+            raise ValueError("use_kernel is only supported for single-policy "
+                             "sweeps (the kernel specializes eq. 16)")
+        res = _sweep_multi(tstack, cflat, kflat, lflat, pflat, policy_names,
+                           estimate_z)
+    res = SimResult(*(x[:, :G].reshape((len(trace_list), L, P, C, S))
+                      for x in res))
+    return SweepGrid(res, policy_names, tuple(params_list), caps,
+                     tuple(seeds))

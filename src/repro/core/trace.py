@@ -38,15 +38,22 @@ class Trace(NamedTuple):
 
 
 def draw_latencies(key: jax.Array, z_mean_per_req: jax.Array,
-                   stochastic: bool) -> jax.Array:
-    """Realized fetch durations per request index (used only on a miss)."""
+                   stochastic: bool, dist=None) -> jax.Array:
+    """Realized fetch durations per request index (used only on a miss).
+
+    ``dist`` — a :class:`repro.core.distributions.MissLatency`; overrides the
+    legacy ``stochastic`` switch (True -> Exponential, False -> the mean).
+    """
+    if dist is not None:
+        return dist.sample(key, z_mean_per_req)
     if not stochastic:
         return z_mean_per_req
     e = jax.random.exponential(key, z_mean_per_req.shape, jnp.float32)
     return z_mean_per_req * e
 
 
-def make_trace(times, objs, sizes, z_mean, key=None, stochastic=True) -> Trace:
+def make_trace(times, objs, sizes, z_mean, key=None, stochastic=True,
+               dist=None) -> Trace:
     times = jnp.asarray(times, jnp.float32)
     objs = jnp.asarray(objs, jnp.int32)
     sizes = jnp.asarray(sizes, jnp.float32)
@@ -54,7 +61,7 @@ def make_trace(times, objs, sizes, z_mean, key=None, stochastic=True) -> Trace:
     per_req = z_mean[objs]
     if key is None:
         key = jax.random.key(0)
-    z_draw = draw_latencies(key, per_req, stochastic)
+    z_draw = draw_latencies(key, per_req, stochastic, dist=dist)
     return Trace(times, objs, sizes, z_mean, z_draw)
 
 

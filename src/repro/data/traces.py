@@ -17,6 +17,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.distributions import MissLatency, make_distribution
 from repro.core.trace import Trace, make_trace
 
 __all__ = ["SyntheticSpec", "zipf_probs", "synthetic_trace",
@@ -43,6 +44,16 @@ class SyntheticSpec:
     latency_base: float = 0.005    # L: 5 ms (paper §5.4)
     latency_per_mb: float = 2e-4   # c: size-proportional component
     stochastic: bool = True        # Exp-distributed realized fetch latency
+    # Fetch-latency law beyond the paper's Deterministic/Exponential pair:
+    # a registry name from repro.core.distributions ('erlang', 'hyperexp',
+    # ...) or None to keep the legacy `stochastic` switch.
+    latency_dist: str | None = None
+    dist_kwargs: tuple = ()        # e.g. (('k', 3),) for Erlang(k=3)
+
+    def make_dist(self) -> MissLatency | None:
+        if self.latency_dist is None:
+            return None
+        return make_distribution(self.latency_dist, **dict(self.dist_kwargs))
 
 
 def _interarrivals(key, spec: SyntheticSpec) -> jax.Array:
@@ -68,7 +79,7 @@ def synthetic_trace(key: jax.Array, spec: SyntheticSpec = SyntheticSpec()) -> Tr
     times = jnp.cumsum(_interarrivals(k_gap, spec))
     z_mean = spec.latency_base + spec.latency_per_mb * sizes
     return make_trace(times, objs, sizes, z_mean, key=k_lat,
-                      stochastic=spec.stochastic)
+                      stochastic=spec.stochastic, dist=spec.make_dist())
 
 
 # ---------------------------------------------------------------------------

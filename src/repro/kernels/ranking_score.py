@@ -22,9 +22,10 @@ from jax.experimental import pallas as pl
 INF = 3.4e38  # python float: jnp constants would be captured by the kernel
 
 
-def _rank_kernel(lam_ref, z_ref, r_ref, s_ref, c_ref, f_ref, bmin_ref,
-                 barg_ref, *, omega: float, block: int):
+def _rank_kernel(om_ref, lam_ref, z_ref, r_ref, s_ref, c_ref, f_ref, bmin_ref,
+                 barg_ref, *, block: int):
     ib = pl.program_id(0)
+    omega = om_ref[0]
     lam = lam_ref[...]
     z = z_ref[...]
     z2 = z * z
@@ -39,10 +40,15 @@ def _rank_kernel(lam_ref, z_ref, r_ref, s_ref, c_ref, f_ref, bmin_ref,
     barg_ref[0] = idx.astype(jnp.int32) + ib * block
 
 
-@functools.partial(jax.jit, static_argnames=("omega", "block", "interpret"))
-def ranking_scores(lam, z, resid, sizes, cached, *, omega: float = 1.0,
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def ranking_scores(lam, z, resid, sizes, cached, *, omega=1.0,
                    block: int = 1024, interpret: bool = True):
-    """All inputs (N,); returns (scores (N,), victim_idx, victim_score)."""
+    """All inputs (N,); returns (scores (N,), victim_idx, victim_score).
+
+    ``omega`` is a scalar *operand* (python float or traced f32) so the
+    simulator can thread a swept PolicyParams.omega through without
+    retracing — it rides in as a broadcast (1,)-block input.
+    """
     n = lam.shape[0]
     block = min(block, max(128, n))
     pad = (-n) % block
@@ -55,11 +61,13 @@ def ranking_scores(lam, z, resid, sizes, cached, *, omega: float = 1.0,
         cached = cached.astype(jnp.int32)
     npad = n + pad
     grid = (npad // block,)
+    om = jnp.asarray(omega, jnp.float32).reshape(1)
 
     f, bmin, barg = pl.pallas_call(
-        functools.partial(_rank_kernel, omega=omega, block=block),
+        functools.partial(_rank_kernel, block=block),
         grid=grid,
-        in_specs=[pl.BlockSpec((block,), lambda i: (i,))] * 5,
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,))] +
+                 [pl.BlockSpec((block,), lambda i: (i,))] * 5,
         out_specs=[
             pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((1,), lambda i: (i,)),
@@ -71,7 +79,7 @@ def ranking_scores(lam, z, resid, sizes, cached, *, omega: float = 1.0,
             jax.ShapeDtypeStruct((grid[0],), jnp.int32),
         ],
         interpret=interpret,
-    )(lam.astype(jnp.float32), z.astype(jnp.float32),
+    )(om, lam.astype(jnp.float32), z.astype(jnp.float32),
       resid.astype(jnp.float32), sizes.astype(jnp.float32), cached)
 
     ib = jnp.argmin(bmin)

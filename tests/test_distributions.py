@@ -1,0 +1,192 @@
+"""The pluggable miss-latency distribution layer (repro.core.distributions).
+
+Mirrors the Theorem-1/2 validation in test_delay_stats.py: the generic
+compound-Poisson moment formulas must (a) reproduce the papers' closed forms
+*exactly* for Deterministic/Exponential, and (b) agree with the Monte-Carlo
+oracle for the beyond-paper Erlang / Hyperexponential / arbitrary-sampler
+shapes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import delay_stats as ds
+from repro.core import distributions as dl
+
+CASES = [
+    # (lambda, z) — spanning light to heavy delayed-hit regimes
+    (0.1, 0.5),
+    (1.0, 1.0),
+    (5.0, 0.3),
+    (2.0, 4.0),
+]
+
+
+# ---------------------------------------------------------------------------
+# (a) exact reproduction of the papers' closed forms
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("lam,z", CASES)
+def test_deterministic_is_theorem1_exactly(lam, z):
+    d = dl.Deterministic()
+    assert float(d.agg_mean(lam, z)) == float(ds.det_mean(lam, z))
+    assert float(d.agg_var(lam, z)) == float(ds.det_var(lam, z))
+
+
+@pytest.mark.parametrize("lam,z", CASES)
+def test_exponential_is_theorem2_exactly(lam, z):
+    d = dl.Exponential()
+    assert float(d.agg_mean(lam, z)) == float(ds.stoch_mean(lam, z))
+    assert float(d.agg_var(lam, z)) == float(ds.stoch_var(lam, z))
+
+
+@pytest.mark.parametrize("lam,z", CASES)
+def test_generic_formulas_recover_both_theorems(lam, z):
+    """The compound-Poisson identity specializes to Theorem 1 (m_k = z^k)
+    and Theorem 2 (m_k = k! z^k)."""
+    for d, mean_fn, var_fn in [
+            (dl.Deterministic(), ds.det_mean, ds.det_var),
+            (dl.Exponential(), ds.stoch_mean, ds.stoch_var)]:
+        m1, m2, m3, m4 = d.raw_moments(z)
+        np.testing.assert_allclose(
+            float(ds.agg_mean_from_moments(lam, m1, m2)),
+            float(mean_fn(lam, z)), rtol=1e-6)
+        np.testing.assert_allclose(
+            float(ds.agg_var_from_moments(lam, m1, m2, m3, m4)),
+            float(var_fn(lam, z)), rtol=1e-6)
+
+
+def test_erlang_k1_equals_exponential():
+    """Erlang(1) is the Exponential law through the generic formulas."""
+    e1, ex = dl.Erlang(k=1.0), dl.Exponential()
+    lam, z = 3.0, 0.4
+    np.testing.assert_allclose(float(e1.agg_mean(lam, z)),
+                               float(ex.agg_mean(lam, z)), rtol=1e-6)
+    np.testing.assert_allclose(float(e1.agg_var(lam, z)),
+                               float(ex.agg_var(lam, z)), rtol=1e-6)
+
+
+def test_degenerate_hyperexp_equals_exponential():
+    """mu_fast=1 collapses the mixture to a single Exp branch."""
+    h = dl.Hyperexponential(p=0.9, mu_fast=1.0)
+    lam, z = 2.0, 0.7
+    np.testing.assert_allclose(float(h.agg_mean(lam, z)),
+                               float(dl.Exponential().agg_mean(lam, z)),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(h.agg_var(lam, z)),
+                               float(dl.Exponential().agg_var(lam, z)),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# (b) beyond-paper shapes vs the Monte-Carlo oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("lam,z", CASES)
+@pytest.mark.parametrize("dist", [dl.Erlang(k=2.0), dl.Erlang(k=4.0)],
+                         ids=["erlang2", "erlang4"])
+def test_erlang_moments_match_mc(lam, z, dist):
+    key = jax.random.key(11)
+    m, v = ds.mc_moments(key, lam, z, n=400_000, sampler=dist.sample_unit)
+    np.testing.assert_allclose(float(m), float(dist.agg_mean(lam, z)),
+                               rtol=0.02)
+    np.testing.assert_allclose(float(v), float(dist.agg_var(lam, z)),
+                               rtol=0.08)
+
+
+@pytest.mark.parametrize("lam,z", [(1.0, 1.0), (5.0, 0.3)])
+def test_hyperexponential_moments_match_mc(lam, z):
+    dist = dl.Hyperexponential(p=0.8, mu_fast=0.5)
+    key = jax.random.key(12)
+    m, v = ds.mc_moments(key, lam, z, n=800_000, sampler=dist.sample_unit)
+    np.testing.assert_allclose(float(m), float(dist.agg_mean(lam, z)),
+                               rtol=0.02)
+    # the mixture's heavy tail makes the MC variance-of-variance large
+    np.testing.assert_allclose(float(v), float(dist.agg_var(lam, z)),
+                               rtol=0.15)
+
+
+def test_monte_carlo_fallback_matches_erlang():
+    """An arbitrary-sampler distribution recovers the analytic Erlang
+    moments from its empirical shape estimate."""
+    k = 3.0
+    mc = dl.MonteCarlo(
+        sampler=lambda key, shape: jax.random.gamma(key, k, shape) / k,
+        n_est=400_000)
+    ref = dl.Erlang(k=k)
+    got = np.array(mc.shape_moments())
+    want = np.array([float(x) for x in ref.shape_moments()])
+    np.testing.assert_allclose(got, want, rtol=0.03)
+    np.testing.assert_allclose(float(mc.agg_mean(2.0, 0.5)),
+                               float(ref.agg_mean(2.0, 0.5)), rtol=0.02)
+
+
+# ---------------------------------------------------------------------------
+# structure: variance ordering, pytree round-trips, registry
+# ---------------------------------------------------------------------------
+def test_variance_ordering_erlang_interpolates():
+    """Var[D] decreases in k: Exp (k=1) is the worst analytic case, the
+    deterministic limit the best (Remark 3 generalized)."""
+    lam, z = 4.0, 0.5
+    vs = [float(dl.Erlang(k=k).agg_var(lam, z)) for k in (1.0, 2.0, 4.0, 16.0)]
+    assert vs == sorted(vs, reverse=True)
+    assert vs[0] == pytest.approx(float(dl.Exponential().agg_var(lam, z)),
+                                  rel=1e-5)
+    assert vs[-1] > float(dl.Deterministic().agg_var(lam, z))
+
+
+def test_hyperexp_is_heavier_than_exponential():
+    lam, z = 2.0, 0.5
+    h = dl.Hyperexponential(p=0.9, mu_fast=0.3)
+    assert float(h.agg_var(lam, z)) > float(dl.Exponential().agg_var(lam, z))
+
+
+@pytest.mark.parametrize("dist", [
+    dl.Deterministic(), dl.Exponential(), dl.Erlang(k=3.0),
+    dl.Hyperexponential(p=0.7, mu_fast=0.4)],
+    ids=["det", "exp", "erlang", "hyper"])
+def test_pytree_roundtrip(dist):
+    leaves, treedef = jax.tree_util.tree_flatten(dist)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert type(back) is type(dist)
+    np.testing.assert_allclose(
+        np.array([float(x) for x in back.shape_moments()]),
+        np.array([float(x) for x in dist.shape_moments()]), rtol=1e-6)
+
+
+def test_sampler_means_are_unit():
+    key = jax.random.key(3)
+    for d in (dl.Deterministic(), dl.Exponential(), dl.Erlang(k=3.0),
+              dl.Hyperexponential(p=0.8, mu_fast=0.5)):
+        u = d.sample_unit(key, (200_000,))
+        np.testing.assert_allclose(float(u.mean()), 1.0, rtol=0.02)
+
+
+def test_registry_and_errors():
+    assert isinstance(dl.make_distribution("erlang", k=3.0), dl.Erlang)
+    with pytest.raises(ValueError):
+        dl.make_distribution("cauchy")
+
+
+@pytest.mark.parametrize("p,mu", [(0.9, 1.2), (1.0, 1.0), (-0.1, 0.5),
+                                  (0.5, 0.0)])
+def test_hyperexp_rejects_degenerate_parameters(p, mu):
+    """p*mu_fast >= 1 (or p/mu out of range) would imply a negative or
+    undefined slow-branch mean — rejected at construction."""
+    with pytest.raises(ValueError):
+        dl.Hyperexponential(p=p, mu_fast=mu)
+
+
+def test_trace_sampling_uses_distribution():
+    """make_trace(dist=...) draws realized latencies from the given law."""
+    from repro.core.trace import make_trace
+    n = 50_000
+    times = np.arange(1, n + 1, dtype=np.float32)
+    objs = np.zeros(n, np.int64)
+    z = 0.5
+    tr = make_trace(times, objs, [1.0], [z], key=jax.random.key(5),
+                    dist=dl.Erlang(k=4.0))
+    draws = np.asarray(tr.z_draw)
+    np.testing.assert_allclose(draws.mean(), z, rtol=0.02)
+    # Erlang(4) has CV^2 = 1/4; Exponential would give CV^2 = 1
+    cv2 = draws.var() / draws.mean() ** 2
+    np.testing.assert_allclose(cv2, 0.25, rtol=0.1)

@@ -81,6 +81,21 @@ def test_zero_latency_world_is_all_misses_but_no_delay():
     assert int(r.n_delayed) == 0
 
 
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_kernel_scored_path_matches_rank_path(backend):
+    """use_kernel routes commit-time scoring through the fused Pallas kernel
+    (interpret mode) or its jnp oracle; results must be identical."""
+    spec = SyntheticSpec(n_objects=60, n_requests=2000, rate=500.0,
+                         latency_base=0.01, latency_per_mb=1e-3)
+    trace = synthetic_trace(jax.random.key(2), spec)
+    base = simulate(trace, 200.0, "stoch_vacdh")
+    got = simulate(trace, 200.0, "stoch_vacdh", use_kernel=backend)
+    np.testing.assert_allclose(float(got.total_latency),
+                               float(base.total_latency), rtol=1e-6)
+    assert int(got.n_evictions) == int(base.n_evictions)
+    assert int(got.n_hits) == int(base.n_hits)
+
+
 def test_variance_aware_beats_lru_under_stochastic_latency():
     """Smoke-level reproduction of the paper's headline: ours < LRU latency."""
     spec = SyntheticSpec(n_objects=100, n_requests=20_000, rate=2000.0,

@@ -1,0 +1,56 @@
+#!/usr/bin/env python3
+"""Fail CI when code cites a DESIGN.md / EXPERIMENTS.md section that
+doesn't exist.
+
+Code and docs cite sections as ``DESIGN.md §3`` / ``EXPERIMENTS.md §Perf``;
+the docs declare sections as markdown headings containing ``§<id>``
+(e.g. ``## §3 ...``).  Run from the repository root (CI does).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOCS = ("DESIGN.md", "EXPERIMENTS.md")
+CITE_RE = re.compile(r"(DESIGN|EXPERIMENTS)\.md\s+§([A-Za-z0-9_.-]+)")
+HEADING_RE = re.compile(r"^#{1,6}.*§([A-Za-z0-9_.-]+)", re.MULTILINE)
+SCAN_SUFFIXES = {".py", ".md"}
+
+
+def declared_sections(doc: pathlib.Path) -> set[str]:
+    if not doc.exists():
+        return set()
+    return set(HEADING_RE.findall(doc.read_text()))
+
+
+def main() -> int:
+    sections = {d.split(".")[0]: declared_sections(ROOT / d) for d in DOCS}
+    failures = []
+    for path in ROOT.rglob("*"):
+        if path.suffix not in SCAN_SUFFIXES or not path.is_file():
+            continue
+        if any(part.startswith(".") or part in ("results", "__pycache__")
+               for part in path.relative_to(ROOT).parts):
+            continue
+        for m in CITE_RE.finditer(path.read_text(errors="ignore")):
+            # sentence punctuation is not part of the section id
+            doc, sec = m.group(1), m.group(2).rstrip(".-")
+            if not (ROOT / f"{doc}.md").exists():
+                failures.append(f"{path.relative_to(ROOT)}: cites {doc}.md "
+                                f"§{sec} but {doc}.md does not exist")
+            elif sec not in sections[doc]:
+                failures.append(f"{path.relative_to(ROOT)}: cites {doc}.md "
+                                f"§{sec} but no such section heading")
+    if failures:
+        print("dangling documentation citations:")
+        for f in failures:
+            print("  " + f)
+        return 1
+    print("all DESIGN.md/EXPERIMENTS.md section citations resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
