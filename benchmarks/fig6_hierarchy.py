@@ -1,0 +1,126 @@
+"""Fig. 6 (beyond the paper): when does variance-aware L1 ranking pay off
+in a two-tier hierarchy?
+
+The paper's eq. 16 assumes exponential fetch latency; in a hierarchy the
+L1's effective fetch law is hop + R_L2(t) — a state-dependent mixture that
+no closed form covers (DESIGN.md §8).  This benchmark sweeps
+
+    routing x hop-delay CV x n_shards x L2 capacity x L1 policy
+
+through :func:`repro.core.sweep.sweep_hier_grid` (one compiled call per
+(route, n_shards) — the hop-CV axis rides the stacked-trace axis, policies
+ride the multi-policy lane axis) and reports each policy's improvement vs
+an LRU L1 under the same L2.  Results and the measured wall-clock for the
+shard-vmapped sweeps are recorded in EXPERIMENTS.md §Hierarchy / §Perf.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PolicyParams, make_hier_trace, simulate_hier, \
+    sweep_hier_grid
+from repro.core.distributions import (Deterministic, Erlang, Exponential,
+                                      Hyperexponential)
+from repro.data.traces import SyntheticSpec, synthetic_trace
+
+from .common import emit
+
+POLICIES = ("lru", "vacdh", "stoch_vacdh")
+
+# Hop-delay laws ordered by coefficient of variation (the fig6 x-axis).
+HOP_DISTS = (
+    ("det", Deterministic()),
+    ("erlang4", Erlang(k=4.0)),
+    ("exp", Exponential()),
+    ("hyperexp", Hyperexponential(p=0.9, mu_fast=0.25)),
+)
+
+
+def _cv(dist) -> float:
+    c1, c2, _, _ = dist.shape_moments()
+    return float(jnp.sqrt(jnp.maximum(jnp.asarray(c2) - 1.0, 0.0)))
+
+
+def _spec(full: bool) -> SyntheticSpec:
+    return SyntheticSpec(
+        n_objects=200 if full else 120,
+        n_requests=100_000 if full else 30_000,
+        rate=2000.0, latency_base=0.02, latency_per_mb=2e-4,
+        size_min=1.0, size_max=100.0, stochastic=True)
+
+
+def run(full: bool = False, seed: int = 0, compare: bool = False) -> list[dict]:
+    spec = _spec(full)
+    base = synthetic_trace(jax.random.key(seed), spec)
+    shard_counts = (1, 2, 4, 8) if full else (1, 4)
+    l1_cap = 400.0                     # per shard
+    l2_caps = (0.0, 1500.0, 4000.0) if full else (0.0, 2000.0)
+    hop_mean = 0.01
+    params = PolicyParams(omega=1.0)
+
+    rows: list[dict] = []
+    for route in ("hash", "random"):
+        for S in shard_counts:
+            traces = [make_hier_trace(base, S, key=jax.random.key(7),
+                                      hop_mean=hop_mean, hop_dist=d,
+                                      route=route)
+                      for _, d in HOP_DISTS]
+            t0 = time.time()
+            g = sweep_hier_grid(traces, S, l1_cap, l2_caps, list(POLICIES),
+                                params, estimate_z=True)
+            tot = jax.block_until_ready(g.result.total_latency)
+            sweep_s = time.time() - t0
+            lru_li = POLICIES.index("lru")
+            for ti, (dname, d) in enumerate(HOP_DISTS):
+                for c2i, c2 in enumerate(l2_caps):
+                    lru_lat = float(tot[ti, lru_li, 0, 0, c2i, 0])
+                    for li, pol in enumerate(POLICIES):
+                        r = g.point(ti, li, 0, 0, c2i, 0)
+                        lat = float(jnp.sum(r.per_shard.total_latency))
+                        n_req = float(jnp.sum(r.per_shard.n_hits)
+                                      + jnp.sum(r.per_shard.n_delayed)
+                                      + jnp.sum(r.per_shard.n_misses))
+                        l2_arr = float(r.l2.n_hits + r.l2.n_delayed
+                                       + r.l2.n_misses)
+                        rows.append(dict(
+                            route=route, n_shards=S, hop_dist=dname,
+                            hop_cv=round(_cv(d), 3), l2_capacity=c2,
+                            policy=pol, total_latency=round(lat, 4),
+                            improvement_vs_lru=round(
+                                (lru_lat - lat) / max(lru_lat, 1e-9), 5),
+                            l1_hit_ratio=round(
+                                float(jnp.sum(r.per_shard.n_hits)) / n_req, 4),
+                            l2_hit_ratio=round(
+                                float(r.l2.n_hits) / max(l2_arr, 1.0), 4),
+                            sweep_s=round(sweep_s, 2)))
+            if compare:
+                # per-point loop over the same grid, for §Perf honesty
+                t0 = time.time()
+                for ti in range(len(HOP_DISTS)):
+                    for pol in POLICIES:
+                        for c2 in l2_caps:
+                            r = simulate_hier(traces[ti], S, l1_cap, c2, pol,
+                                              params=params)
+                            jax.block_until_ready(r.per_shard.total_latency)
+                print(f"compare route={route} S={S}: batched {sweep_s:.2f}s "
+                      f"vs per-point {time.time()-t0:.2f}s")
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--compare", action="store_true",
+                    help="also time the legacy per-point loop")
+    args = ap.parse_args()
+    emit(run(full=args.full, compare=args.compare), "fig6_hierarchy")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -5,8 +5,9 @@
                          Exponential / Erlang / Hyperexponential / MC).
 - :mod:`ranking`       — eq. 16 variance-aware ranking + every §5.1 baseline.
 - :mod:`simulator`     — vectorized lax.scan trace simulator.
+- :mod:`hierarchy`     — two-tier sharded L1 -> shared L2 simulator.
 - :mod:`sweep`         — batched multi-scenario sweep engine (vmap grids).
-- :mod:`refsim`        — event-driven reference (test oracle).
+- :mod:`refsim`        — event-driven references (single + two-tier oracles).
 - :mod:`trace`         — trace schema.
 """
 from .delay_stats import (agg_mean_from_moments, agg_var_from_moments,
@@ -14,9 +15,10 @@ from .delay_stats import (agg_mean_from_moments, agg_var_from_moments,
 from .distributions import (DISTRIBUTIONS, Deterministic, Erlang, Exponential,
                             Hyperexponential, MissLatency, MonteCarlo,
                             make_distribution)
+from .hierarchy import HierResult, HierTrace, make_hier_trace, simulate_hier
 from .ranking import BASELINES, OURS, POLICIES, Policy, PolicyParams
 from .simulator import SimResult, latency_improvement, simulate
-from .sweep import SweepGrid, sweep_grid
+from .sweep import HierSweepGrid, SweepGrid, sweep_grid, sweep_hier_grid
 from .trace import Trace, make_trace
 
 __all__ = [
@@ -25,6 +27,8 @@ __all__ = [
     "DISTRIBUTIONS", "Deterministic", "Erlang", "Exponential",
     "Hyperexponential", "MissLatency", "MonteCarlo", "make_distribution",
     "BASELINES", "OURS", "POLICIES", "Policy", "PolicyParams",
+    "HierResult", "HierTrace", "make_hier_trace", "simulate_hier",
     "SimResult", "latency_improvement", "simulate",
-    "SweepGrid", "sweep_grid", "Trace", "make_trace",
+    "HierSweepGrid", "SweepGrid", "sweep_grid", "sweep_hier_grid",
+    "Trace", "make_trace",
 ]

@@ -1,9 +1,16 @@
-"""Event-driven reference simulator (pure Python, heap-based).
+"""Event-driven reference simulators (pure Python, heap-based).
 
-Ground truth for :mod:`repro.core.simulator`: classic discrete-event loop with
-an explicit completion-event heap.  It reuses the *same* ranking functions on
-the same ``ObjStats`` container so any disagreement with the scan simulator is
-a semantics bug, not a formula drift.  Only used by tests (tiny traces).
+Ground truth for :mod:`repro.core.simulator` and
+:mod:`repro.core.hierarchy`: classic discrete-event loops with explicit
+completion-event heaps.  They reuse the *same* ranking functions on the same
+``ObjStats`` container so any disagreement with the scan simulators is a
+semantics bug, not a formula drift.  Only used by tests (tiny traces).
+
+:class:`_RefCache` is one delayed-hit cache tier (state + commit + serve);
+:func:`simulate_ref` runs one tier over a trace, and
+:func:`simulate_hier_ref` composes one instance per L1 shard with a shared
+L2 instance — mirroring how :mod:`repro.core.hierarchy` composes the scan
+simulator's commit/serve core per tier (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -23,40 +30,45 @@ def _gd_cost(policy, o: ObjStats, sizes, p):
     return cost / np.maximum(sizes, 1e-6)
 
 
-def simulate_ref(trace: Trace, capacity: float, policy_name: str,
-                 params: PolicyParams | None = None,
-                 estimate_z: bool = False) -> dict:
-    p = params or PolicyParams()
-    policy = POLICIES[policy_name]
-    if policy.admission != "always":
-        raise NotImplementedError("refsim only covers coin-free policies")
+class _RefCache:
+    """One delayed-hit cache tier of the event-driven reference.
 
-    times = np.asarray(trace.times, np.float32)
-    objs = np.asarray(trace.objs, np.int64)
-    sizes = np.asarray(trace.sizes, np.float32)
-    z_draw = np.asarray(trace.z_draw, np.float32)
-    n = sizes.shape[0]
+    Owns the per-object statistics, the free-capacity accounting, the
+    completion-event heap, and the outcome counters.  ``serve`` takes the
+    realized fetch duration for the miss case as an argument — in the
+    hierarchy that duration is ``hop + R_L2(t)``, computed by the caller
+    from the L2 tier's own ``serve``.
+    """
 
-    f = lambda v: np.full(n, v, np.float32)
-    o = ObjStats(
-        cached=np.zeros(n, bool), in_flight=np.zeros(n, bool),
-        complete_t=f(np.inf), issue_t=f(0.0),
-        last_access=f(-np.inf), first_access=f(-np.inf),
-        gap_mean=f(0.0), count=f(0.0),
-        z_est=np.asarray(trace.z_mean, np.float32).copy(),
-        agg_sum=f(0.0), agg_sq_sum=f(0.0), agg_cnt=f(0.0),
-        episode_delay=f(0.0), gd_h=f(0.0),
-    )
-    o = ObjStats(*(a.copy() for a in o))
+    def __init__(self, n: int, capacity: float, policy_name: str,
+                 params: PolicyParams | None, z_prior,
+                 estimate_z: bool):
+        self.p = params or PolicyParams()
+        self.policy = POLICIES[policy_name]
+        if self.policy.admission != "always":
+            raise NotImplementedError("refsim only covers coin-free policies")
+        self.estimate_z = estimate_z
+        f = lambda v: np.full(n, v, np.float32)
+        self.o = ObjStats(
+            cached=np.zeros(n, bool), in_flight=np.zeros(n, bool),
+            complete_t=f(np.inf), issue_t=f(0.0),
+            last_access=f(-np.inf), first_access=f(-np.inf),
+            gap_mean=f(0.0), count=f(0.0),
+            z_est=np.broadcast_to(np.asarray(z_prior, np.float32),
+                                  (n,)).copy(),
+            agg_sum=f(0.0), agg_sq_sum=f(0.0), agg_cnt=f(0.0),
+            episode_delay=f(0.0), gd_h=f(0.0),
+        )
+        self.sizes = None            # bound by the driver before use
+        self.free = np.float32(capacity)
+        self.gd_clock = np.float32(0.0)
+        self.heap: list[tuple[float, int]] = []   # (complete_t, obj)
+        self.total = 0.0
+        self.hits = self.delayed = self.misses = self.evictions = 0
 
-    free = np.float32(capacity)
-    gd_clock = np.float32(0.0)
-    heap: list[tuple[float, int]] = []   # (complete_t, obj)
-    total = 0.0
-    hits = delayed = misses = evictions = 0
-
-    def commit(j: int, t_c: float):
-        nonlocal free, gd_clock, evictions
+    # --- fetch commit (admission + eviction at completion time) ---------
+    def commit(self, j: int, t_c: float) -> None:
+        o, p, policy = self.o, self.p, self.policy
         realized = t_c - o.issue_t[j]
         ep = o.episode_delay[j]
         o.agg_sum[j] += ep
@@ -65,65 +77,153 @@ def simulate_ref(trace: Trace, capacity: float, policy_name: str,
         o.episode_delay[j] = 0.0
         o.in_flight[j] = False
         o.complete_t[j] = np.inf
-        if estimate_z:
+        if self.estimate_z:
             o.z_est[j] = 0.7 * o.z_est[j] + 0.3 * realized
         if policy.greedydual:
-            o.gd_h[j] = gd_clock + _gd_cost(policy, o, sizes, p)[j]
-        ranks = np.asarray(policy.rank(o, sizes, np.float32(t_c), p),
+            o.gd_h[j] = self.gd_clock + _gd_cost(policy, o, self.sizes, p)[j]
+        ranks = np.asarray(policy.rank(o, self.sizes, np.float32(t_c), p),
                            np.float32)
         rank_j = ranks[j]
         ok = True
-        while ok and free < sizes[j]:
+        while ok and self.free < self.sizes[j]:
             vr = np.where(o.cached, ranks, np.inf)
             v = int(np.argmin(vr))
             if vr[v] < (rank_j if policy.compare_admission else np.inf):
                 o.cached[v] = False
-                free += sizes[v]
-                evictions += 1
+                self.free += self.sizes[v]
+                self.evictions += 1
                 if policy.greedydual:
-                    gd_clock = max(gd_clock, vr[v])
+                    self.gd_clock = max(self.gd_clock, vr[v])
             else:
                 ok = False
-        if ok and free >= sizes[j]:
+        if ok and self.free >= self.sizes[j]:
             o.cached[j] = True
-            free -= sizes[j]
+            self.free -= self.sizes[j]
 
-    for k in range(len(times)):
-        t, i = float(times[k]), int(objs[k])
-        while heap and heap[0][0] <= t:
-            t_c, j = heapq.heappop(heap)
-            commit(j, t_c)
-        # serve
-        if o.cached[i]:
+    def commit_due(self, t: float) -> None:
+        while self.heap and self.heap[0][0] <= t:
+            t_c, j = heapq.heappop(self.heap)
+            self.commit(j, t_c)
+
+    # --- request arrival -------------------------------------------------
+    def status(self, i: int) -> str:
+        if self.o.cached[i]:
+            return "hit"
+        if self.o.in_flight[i]:
+            return "delayed"
+        return "miss"
+
+    def serve(self, t: float, i: int, z_realized: float) -> float:
+        """Serve arrival (t, i); ``z_realized`` is used only on a miss.
+        Returns the arrival's latency at this tier."""
+        o = self.o
+        kind = self.status(i)
+        if kind == "hit":
             lat = 0.0
-            hits += 1
-        elif o.in_flight[i]:
+            self.hits += 1
+        elif kind == "delayed":
             lat = max(float(o.complete_t[i]) - t, 0.0)
             o.episode_delay[i] += np.float32(lat)
-            delayed += 1
+            self.delayed += 1
         else:
-            z = float(z_draw[k])
+            z = float(z_realized)
             lat = z
             o.in_flight[i] = True
             o.complete_t[i] = np.float32(t + z)
             o.issue_t[i] = np.float32(t)
             o.episode_delay[i] = np.float32(z)
-            heapq.heappush(heap, (t + z, i))
-            misses += 1
+            heapq.heappush(self.heap, (t + z, i))
+            self.misses += 1
         cnt = o.count[i]
         gap = np.float32(t) - o.last_access[i]
         if cnt == 1.0:
             o.gap_mean[i] = gap
         elif cnt > 1.0:
-            a_eff = max(1.0 / p.window, 1.0 / max(cnt, 1.0))
+            a_eff = max(1.0 / self.p.window, 1.0 / max(cnt, 1.0))
             o.gap_mean[i] = o.gap_mean[i] + a_eff * (gap - o.gap_mean[i])
         if cnt == 0.0:
             o.first_access[i] = np.float32(t)
         o.last_access[i] = np.float32(t)
         o.count[i] = cnt + 1.0
-        if policy.greedydual and o.cached[i]:
-            o.gd_h[i] = gd_clock + _gd_cost(policy, o, sizes, p)[i]
-        total += lat
+        if self.policy.greedydual and o.cached[i]:
+            self.o.gd_h[i] = self.gd_clock + _gd_cost(
+                self.policy, o, self.sizes, self.p)[i]
+        self.total += lat
+        return lat
 
-    return dict(total_latency=total, n_hits=hits, n_delayed=delayed,
-                n_misses=misses, n_evictions=evictions)
+    def counters(self) -> dict:
+        return dict(total_latency=self.total, n_hits=self.hits,
+                    n_delayed=self.delayed, n_misses=self.misses,
+                    n_evictions=self.evictions)
+
+
+def simulate_ref(trace: Trace, capacity: float, policy_name: str,
+                 params: PolicyParams | None = None,
+                 estimate_z: bool = False) -> dict:
+    times = np.asarray(trace.times, np.float32)
+    objs = np.asarray(trace.objs, np.int64)
+    z_draw = np.asarray(trace.z_draw, np.float32)
+    cache = _RefCache(trace.n_objects, capacity, policy_name, params,
+                      np.asarray(trace.z_mean, np.float32), estimate_z)
+    cache.sizes = np.asarray(trace.sizes, np.float32)
+    for k in range(len(times)):
+        t = float(times[k])
+        cache.commit_due(t)
+        cache.serve(t, int(objs[k]), z_draw[k])
+    return cache.counters()
+
+
+def simulate_hier_ref(trace, n_shards: int, l1_capacity: float,
+                      l2_capacity: float, policy_name: str,
+                      l2_policy: str = "lru",
+                      params: PolicyParams | None = None,
+                      l2_params: PolicyParams | None = None,
+                      estimate_z: bool = True) -> dict:
+    """Two-tier oracle over a :class:`repro.core.hierarchy.HierTrace`.
+
+    Per-tier semantics are :class:`_RefCache`'s single-tier semantics; the
+    composition contract (an L1 miss is an L2 arrival at the same instant,
+    the L1 fetch completes ``hop + R_L2(t)`` later) mirrors
+    `core/hierarchy.py` exactly — see DESIGN.md §8 for why commit order
+    *between* tiers is immaterial (tier states are independent; only
+    within-tier completion order matters, and each heap preserves it).
+    """
+    times = np.asarray(trace.times, np.float32)
+    objs = np.asarray(trace.objs, np.int64)
+    shards = np.asarray(trace.shards, np.int64)
+    z_draw = np.asarray(trace.z_draw, np.float32)
+    hop_draw = np.asarray(trace.hop_draw, np.float32)
+    sizes = np.asarray(trace.sizes, np.float32)
+    z_mean = np.asarray(trace.z_mean, np.float32)
+    n = trace.n_objects
+    if l2_params is None:
+        l2_params = PolicyParams()   # decoupled default, as in simulate_hier
+
+    l1_prior = np.float32(trace.hop_mean) + z_mean
+    l1 = [_RefCache(n, l1_capacity, policy_name, params, l1_prior,
+                    estimate_z) for _ in range(n_shards)]
+    l2 = _RefCache(n, l2_capacity, l2_policy, l2_params, z_mean, estimate_z)
+    for c in l1:
+        c.sizes = sizes
+    l2.sizes = sizes
+
+    for k in range(len(times)):
+        t, i, s = float(times[k]), int(objs[k]), int(shards[k])
+        l2.commit_due(t)
+        for c in l1:
+            c.commit_due(t)
+        c1 = l1[s]
+        z_eff = np.float32(0.0)
+        if c1.status(i) == "miss":
+            res = l2.serve(t, i, z_draw[k])
+            z_eff = np.float32(hop_draw[k] + np.float32(res))
+        c1.serve(t, i, z_eff)
+
+    agg = dict(total_latency=sum(c.total for c in l1),
+               n_hits=sum(c.hits for c in l1),
+               n_delayed=sum(c.delayed for c in l1),
+               n_misses=sum(c.misses for c in l1),
+               n_evictions=sum(c.evictions for c in l1))
+    agg["l2"] = l2.counters()
+    agg["per_shard"] = [c.counters() for c in l1]
+    return agg

@@ -16,6 +16,12 @@ The per-commit scoring hot path can run through the fused Pallas kernel
 interpret-mode or the jnp reference on CPU (DESIGN.md §3).  The unjitted
 :func:`_simulate_impl` is the composition point for :mod:`repro.core.sweep`,
 which vmaps it over whole hyperparameter grids.
+
+The commit/evict/serve core is deliberately exposed as free functions over
+``(_Behavior, PolicyParams, SimState)`` — :func:`_commit_one`,
+:func:`_commit_due`, and :func:`_serve` — so the two-tier hierarchy
+simulator (:mod:`repro.core.hierarchy`, DESIGN.md §8) composes the exact
+same machinery per tier instead of forking it.
 """
 from __future__ import annotations
 
@@ -257,9 +263,24 @@ def _commit_one(b: _Behavior, p: PolicyParams, estimate_z: bool,
                           n_evictions=n_ev)
 
 
+def _commit_due(b: _Behavior, p: PolicyParams, estimate_z: bool,
+                state: SimState, sizes: jax.Array, t) -> SimState:
+    """Commit every outstanding fetch with ``complete_t <= t``, in
+    completion-time order (the lazy-commit loop run before serving each
+    request; see the module docstring)."""
+    return jax.lax.while_loop(
+        lambda s: s.min_complete <= t,
+        lambda s: _commit_one(b, p, estimate_z, s, sizes),
+        state)
+
+
 def _serve(b: _Behavior, p: PolicyParams, state: SimState,
-           sizes: jax.Array, t, i, z_realized) -> SimState:
-    """Serve the request (t, i); z_realized is used only if it's a miss."""
+           sizes: jax.Array, t, i, z_realized):
+    """Serve the request (t, i); z_realized is used only if it's a miss.
+
+    Returns ``(state, latency)``: the latency is also accumulated into the
+    state's Kahan sum, but callers that feed one tier's resolution time into
+    another tier's fetch (the hierarchy, DESIGN.md §8) need it directly."""
     o = state.obj
     ihot = jnp.arange(sizes.shape[0]) == i
     is_hit = o.cached[i]
@@ -305,13 +326,14 @@ def _serve(b: _Behavior, p: PolicyParams, state: SimState,
         _sel(b.greedydual, jnp.where(is_hit, hi, o.gd_h[i]), o.gd_h[i])))
 
     lat_sum, lat_comp = kahan_add(state.lat_sum, state.lat_comp, lat)
-    return state._replace(
+    state = state._replace(
         obj=o, min_complete=min_complete,
         lat_sum=lat_sum, lat_comp=lat_comp,
         n_hits=state.n_hits + is_hit,
         n_delayed=state.n_delayed + is_delayed,
         n_misses=state.n_misses + is_miss,
     )
+    return state, lat
 
 
 def _run_scan(b: _Behavior, trace: Trace, capacity, key,
@@ -320,15 +342,8 @@ def _run_scan(b: _Behavior, trace: Trace, capacity, key,
 
     def step(state: SimState, req):
         t, i, z = req
-
-        def commit_cond(s):
-            return s.min_complete <= t
-
-        def commit_body(s):
-            return _commit_one(b, params, estimate_z, s, trace.sizes)
-
-        state = jax.lax.while_loop(commit_cond, commit_body, state)
-        state = _serve(b, params, state, trace.sizes, t, i, z)
+        state = _commit_due(b, params, estimate_z, state, trace.sizes, t)
+        state, _ = _serve(b, params, state, trace.sizes, t, i, z)
         return state, None
 
     state, _ = jax.lax.scan(

@@ -36,12 +36,14 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from .hierarchy import (HierResult, HierTrace, _hier_impl_named,
+                        _hier_multi_impl, check_shards)
 from .ranking import POLICIES, PolicyParams
 from .simulator import (SimResult, _simulate_impl, _simulate_multi_impl,
                         resolve_score_mode)
 from .trace import Trace
 
-__all__ = ["SweepGrid", "sweep_grid"]
+__all__ = ["SweepGrid", "sweep_grid", "HierSweepGrid", "sweep_hier_grid"]
 
 
 class SweepGrid(NamedTuple):
@@ -96,6 +98,56 @@ def _bucket(n: int, bucket) -> int:
     return -(-n // bucket) * bucket
 
 
+def _check_axes(policies, params):
+    """Shared axis validation: returns (single, policy_names, params_list)."""
+    single = isinstance(policies, str)
+    policy_names = (policies,) if single else tuple(policies)
+    unknown = [n for n in policy_names if n not in POLICIES]
+    if unknown:
+        raise ValueError(f"unknown policies {unknown}; known: "
+                         f"{sorted(POLICIES)}")
+    params_list = ([params] if isinstance(params, PolicyParams)
+                   else list(params))
+    structs = {jax.tree.structure(p) for p in params_list}
+    if len(structs) != 1:
+        raise ValueError(
+            "all PolicyParams in a sweep must share static structure "
+            f"(distribution type); got {structs}")
+    return single, policy_names, params_list
+
+
+def _flatten_lanes(policy_names, params_list, cap_arrays, seeds,
+                   lane_bucket):
+    """Flatten policies x params x capacity-axes x seeds into padded lanes.
+
+    Returns ``(lflat, pflat, capflats, kflat, G)`` where the flats are
+    bucket-padded (repeats of lane 0) and ``G`` is the true lane count to
+    slice back out.  Shared by the single-tier and hierarchy grids so the
+    flatten/pad pipeline cannot drift between them.
+    """
+    dims = [len(policy_names), len(params_list),
+            *[c.shape[0] for c in cap_arrays], len(seeds)]
+    grids = jnp.meshgrid(*[jnp.arange(d) for d in dims], indexing="ij")
+    lflat = grids[0].ravel()
+    pstack = _stack(params_list)
+    pflat = jax.tree.map(lambda x: x[grids[1].ravel()], pstack)
+    capflats = [c[g.ravel()] for c, g in zip(cap_arrays, grids[2:-1])]
+    keys = jnp.stack([jax.random.key(s) for s in seeds])
+    kflat = keys[grids[-1].ravel()]
+
+    G = 1
+    for d in dims:
+        G *= d
+    Gpad = _bucket(G, lane_bucket)
+    if Gpad > G:
+        ext = lambda x: jnp.concatenate(
+            [x, jnp.broadcast_to(x[:1], (Gpad - G,) + x.shape[1:])])
+        lflat, kflat = ext(lflat), ext(kflat)
+        capflats = [ext(c) for c in capflats]
+        pflat = jax.tree.map(ext, pflat)
+    return lflat, pflat, capflats, kflat, G
+
+
 def sweep_grid(traces, capacities, policies,
                params=PolicyParams(), seeds=(0,),
                estimate_z: bool = False, use_kernel=False,
@@ -120,50 +172,21 @@ def sweep_grid(traces, capacities, policies,
     corresponding per-point :func:`simulate` call.
     """
     trace_list = [traces] if isinstance(traces, Trace) else list(traces)
-    single = isinstance(policies, str)
-    policy_names = (policies,) if single else tuple(policies)
-    unknown = [n for n in policy_names if n not in POLICIES]
-    if unknown:
-        raise ValueError(f"unknown policies {unknown}; known: "
-                         f"{sorted(POLICIES)}")
-    params_list = ([params] if isinstance(params, PolicyParams)
-                   else list(params))
+    single, policy_names, params_list = _check_axes(policies, params)
     caps = jnp.atleast_1d(jnp.asarray(capacities, jnp.float32))
     seeds = [int(s) for s in jnp.atleast_1d(jnp.asarray(seeds))]
 
-    structs = {jax.tree.structure(p) for p in params_list}
-    if len(structs) != 1:
-        raise ValueError(
-            "all PolicyParams in a sweep must share static structure "
-            f"(distribution type); got {structs}")
-
     tstack = _stack(trace_list)
-    pstack = _stack(params_list)
-
     L, P, C, S = len(policy_names), len(params_list), caps.shape[0], len(seeds)
-    li, pi, ci, si = jnp.meshgrid(jnp.arange(L), jnp.arange(P),
-                                  jnp.arange(C), jnp.arange(S),
-                                  indexing="ij")
-    lflat = li.ravel()
-    pflat = jax.tree.map(lambda x: x[pi.ravel()], pstack)
-    cflat = caps[ci.ravel()]
-    keys = jnp.stack([jax.random.key(s) for s in seeds])
-    kflat = keys[si.ravel()]
-
-    G = L * P * C * S
-    Gpad = _bucket(G, lane_bucket)
-    if Gpad > G:
-        ext = lambda x: jnp.concatenate(
-            [x, jnp.broadcast_to(x[:1], (Gpad - G,) + x.shape[1:])])
-        lflat, cflat, kflat = ext(lflat), ext(cflat), ext(kflat)
-        pflat = jax.tree.map(ext, pflat)
+    lflat, pflat, (cflat,), kflat, G = _flatten_lanes(
+        policy_names, params_list, [caps], seeds, lane_bucket)
 
     if single:
         # one-hot state updates only when the grid is actually batched —
         # unbatched scatters are cheaper at large N (DESIGN.md §7)
         res = _sweep_single(tstack, cflat, kflat, pflat, policy_names[0],
                             estimate_z, resolve_score_mode(use_kernel),
-                            Gpad > 1)
+                            cflat.shape[0] > 1)
     else:
         if resolve_score_mode(use_kernel) != "rank":
             raise ValueError("use_kernel is only supported for single-policy "
@@ -174,3 +197,126 @@ def sweep_grid(traces, capacities, policies,
                       for x in res))
     return SweepGrid(res, policy_names, tuple(params_list), caps,
                      tuple(seeds))
+
+
+# ---------------------------------------------------------------------------
+# Hierarchy sweeps: n_shards x l2_capacity x hop_dist x policy grids.
+# The hop-distribution axis IS the trace axis (hop draws are pre-drawn into
+# each HierTrace); n_shards is shape-changing, so it stays a caller-side
+# loop (one compiled graph per shard count); everything else — the L1
+# policy lane, PolicyParams, both capacity axes, and seeds — batches into
+# one compiled dispatch exactly like ``sweep_grid`` (DESIGN.md §7/§8).
+# ---------------------------------------------------------------------------
+class HierSweepGrid(NamedTuple):
+    """A swept hierarchy result with its axis metadata.
+
+    ``result`` fields are shaped ``[n_traces, n_policies, n_params,
+    n_l1_capacities, n_l2_capacities, n_seeds]`` (the ``per_shard``
+    SimResult carries a trailing ``[n_shards]`` axis).
+    """
+
+    result: HierResult
+    policies: Sequence[str]
+    params: Sequence[PolicyParams]
+    l1_capacities: jax.Array
+    l2_capacities: jax.Array
+    seeds: Sequence[int]
+    n_shards: int
+
+    def point(self, ti: int, li: int, pi: int, c1: int, c2: int,
+              si: int) -> HierResult:
+        """The HierResult of one grid point (host-side convenience)."""
+        ix = (ti, li, pi, c1, c2, si)
+        return HierResult(
+            per_shard=SimResult(*(f[ix] for f in self.result.per_shard)),
+            l2=SimResult(*(f[ix] for f in self.result.l2)))
+
+
+@functools.partial(jax.jit, static_argnames=("policy_name", "l2_policy",
+                                             "estimate_z", "n_shards"))
+def _sweep_hier_single(tstack, c1s, c2s, keys, pstack, p2, policy_name,
+                       l2_policy, estimate_z, n_shards):
+    def point(tr, c1, c2, k, pp):
+        return _hier_impl_named(tr, c1, c2, k, policy_name, l2_policy, pp,
+                                p2, estimate_z, n_shards)
+
+    inner = jax.vmap(point, in_axes=(None, 0, 0, 0, 0))
+    return jax.vmap(lambda tr: inner(tr, c1s, c2s, keys, pstack))(tstack)
+
+
+@functools.partial(jax.jit, static_argnames=("policy_names", "l2_policy",
+                                             "estimate_z", "n_shards"))
+def _sweep_hier_multi(tstack, c1s, c2s, keys, lidx, pstack, p2, policy_names,
+                      l2_policy, estimate_z, n_shards):
+    def point(tr, c1, c2, k, li, pp):
+        return _hier_multi_impl(tr, c1, c2, k, li, policy_names, l2_policy,
+                                pp, p2, estimate_z, n_shards)
+
+    inner = jax.vmap(point, in_axes=(None, 0, 0, 0, 0, 0))
+    return jax.vmap(lambda tr: inner(tr, c1s, c2s, keys, lidx, pstack))(tstack)
+
+
+def sweep_hier_grid(traces, n_shards: int, l1_capacities, l2_capacities,
+                    policies, params=PolicyParams(), seeds=(0,),
+                    l2_policy: str = "lru",
+                    l2_params: PolicyParams | None = None,
+                    estimate_z: bool = True,
+                    lane_bucket: int | None = None) -> HierSweepGrid:
+    """Run a hierarchy scenario grid in one compiled call per shard count.
+
+    traces         — one :class:`HierTrace` or identically-shaped sequence
+                     (e.g. the same base trace under different hop
+                     distributions — the hop axis of a fig6 grid).
+    n_shards       — static L1 shard count (must match the traces' routing).
+    l1_capacities  — per-shard L1 capacities (scalar or sequence).
+    l2_capacities  — shared-L2 capacities (scalar or sequence).
+    policies       — L1 policy name or sequence of names (unified
+                     multi-policy lane graph, as in :func:`sweep_grid`).
+    l2_policy      — static L2 policy: the L2 is environment, not a swept
+                     axis (loop at the call site to compare L2 policies).
+    l2_params      — L2 hyperparameters; defaults to stock
+                     :class:`PolicyParams` (same decoupled default as
+                     ``simulate_hier`` — the swept L1-params axis never
+                     re-parameterizes the shared L2).
+
+    Returns a :class:`HierSweepGrid`; each point is bitwise identical to
+    the corresponding :func:`repro.core.hierarchy.simulate_hier` call
+    (tests/test_sweep.py) — the hierarchy body always uses one-hot state
+    updates, so batching never changes per-lane arithmetic.
+    """
+    trace_list = [traces] if isinstance(traces, HierTrace) else list(traces)
+    single, policy_names, params_list = _check_axes(policies, params)
+    if l2_policy not in POLICIES:
+        raise ValueError(f"unknown policies [{l2_policy!r}]; known: "
+                         f"{sorted(POLICIES)}")
+    for tr in trace_list:
+        check_shards(tr, n_shards)
+    if l2_params is None:
+        # decoupled default (stock params), matching simulate_hier — the
+        # swept L1-params axis must never re-parameterize the shared L2
+        l2_params = PolicyParams()
+    c1 = jnp.atleast_1d(jnp.asarray(l1_capacities, jnp.float32))
+    c2 = jnp.atleast_1d(jnp.asarray(l2_capacities, jnp.float32))
+    seeds = [int(s) for s in jnp.atleast_1d(jnp.asarray(seeds))]
+
+    tstack = _stack(trace_list)
+    L, P, C1, C2, S = (len(policy_names), len(params_list), c1.shape[0],
+                       c2.shape[0], len(seeds))
+    lflat, pflat, (c1flat, c2flat), kflat, G = _flatten_lanes(
+        policy_names, params_list, [c1, c2], seeds, lane_bucket)
+
+    if single:
+        res = _sweep_hier_single(tstack, c1flat, c2flat, kflat, pflat,
+                                 l2_params, policy_names[0], l2_policy,
+                                 estimate_z, int(n_shards))
+    else:
+        res = _sweep_hier_multi(tstack, c1flat, c2flat, kflat, lflat, pflat,
+                                l2_params, policy_names, l2_policy,
+                                estimate_z, int(n_shards))
+    shape = (len(trace_list), L, P, C1, C2, S)
+    reshape = lambda x: x[:, :G].reshape(shape + x.shape[2:])
+    res = HierResult(
+        per_shard=SimResult(*(reshape(x) for x in res.per_shard)),
+        l2=SimResult(*(reshape(x) for x in res.l2)))
+    return HierSweepGrid(res, policy_names, tuple(params_list), c1, c2,
+                         tuple(seeds), int(n_shards))

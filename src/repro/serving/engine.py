@@ -19,7 +19,17 @@ Two clocks:
 
 Straggler mitigation: hedged prefills — when a fetch exceeds its p95
 predicted latency a duplicate is issued and the first completion wins
-(sim clock models this as min(Z1, t_hedge + Z2')).
+(sim clock models this as min(Z1, t_hedge + Z2'); covered directly by
+tests/test_serving.py).
+
+Hierarchy mode (DESIGN.md §8): pass a second engine as ``l2`` and this
+engine becomes an L1 edge tier — a miss resolves through the shared L2
+instead of drawing from its own latency model, taking ``hop_s`` plus the
+L2's resolution time (0 on an L2 hit, the residual prefill time on an L2
+delayed hit, an origin draw on an L2 miss).  Delayed-hit waiter queues
+compose across tiers exactly as in :mod:`repro.core.hierarchy`; hedging at
+the L1 is disabled (only the L2's origin fetches are hedgeable — an L1
+"fetch" is a queue position at the L2, and duplicating it cannot win).
 """
 from __future__ import annotations
 
@@ -191,12 +201,15 @@ class ServeEngine:
                  params: PolicyParams | None = None,
                  prefill_fn: Callable | None = None,
                  state_size_fn: Callable[[int], float] | None = None,
-                 hedging: bool = True, seed: int = 0):
+                 hedging: bool = True, seed: int = 0,
+                 l2: "ServeEngine | None" = None, hop_s: float = 0.0):
         self.cache = DelayedHitPrefixCache(capacity, policy, params)
         self.latency = latency or LatencyModel()
         self.prefill_fn = prefill_fn           # real-model hook (optional)
         self.state_size = state_size_fn or (lambda n_tok: float(n_tok))
         self.hedging = hedging
+        self.l2 = l2                # shared second tier (hierarchy mode)
+        self.hop_s = hop_s          # round-trip L1<->L2 hop delay
         self.rng = np.random.default_rng(seed)
         self.stats = EngineStats()
         self.events: list[tuple[float, int, str]] = []   # (t, idx, key)
@@ -230,16 +243,21 @@ class ServeEngine:
             self.pending[prefix_key].waiters += 1
             self.stats.total_latency += lat
             return lat
-        # miss: issue the prefill "fetch"
-        z = self.latency.draw(self.rng, n_tokens)
-        if self.hedging:
-            deadline = self.latency.hedge_deadline(n_tokens)
-            if z > deadline:
-                z2 = self.latency.draw(self.rng, n_tokens)
-                z_h = deadline + z2
-                if z_h < z:
-                    z = z_h
-                self.stats.hedges += 1
+        # miss: issue the prefill "fetch" — in hierarchy mode its duration
+        # is hop + the shared L2's resolution time, so L1 waiters queue on a
+        # completion that embeds the L2's own delayed-hit queueing.
+        if self.l2 is not None:
+            z = self.hop_s + self.l2.request(t, prefix_key, n_tokens)
+        else:
+            z = self.latency.draw(self.rng, n_tokens)
+            if self.hedging:
+                deadline = self.latency.hedge_deadline(n_tokens)
+                if z > deadline:
+                    z2 = self.latency.draw(self.rng, n_tokens)
+                    z_h = deadline + z2
+                    if z_h < z:
+                        z = z_h
+                    self.stats.hedges += 1
         comp = t + z
         o.in_flight[i] = True
         o.complete_t[i] = comp

@@ -3,8 +3,12 @@
 Active decode sequences step together (one decode_step per tick, batch-
 packed); prefills are chunk-scheduled between decode ticks so long prompts
 don't starve decodes (Sarathi-style).  Works with the smoke-scale models in
-examples/ on CPU; the same code drives TPU meshes via the sharded serve
-steps from training/train_loop.py.
+examples/ on CPU.  The scheduler itself is backend-agnostic: it only calls
+the (prefill_step, decode_step) closures it is given — e.g. the ones from
+``training/train_loop.py::make_serve_steps``, which are plain jit-able
+functions.  Running on a TPU mesh means jitting those closures with mesh
+shardings from ``sharding/specs.py`` (DESIGN.md §6) before passing them in;
+nothing in this module is mesh-aware.
 """
 from __future__ import annotations
 

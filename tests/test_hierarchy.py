@@ -1,0 +1,156 @@
+"""Two-tier hierarchy: scan == event-driven oracle, degenerate == single-tier.
+
+Parity contract (same shape as tests/test_sweep.py's): outcome counters are
+exact at every tier, total latency agrees to float32 accumulation tolerance,
+and the batched hierarchy sweep (tested in test_sweep.py) is bitwise equal
+to per-point ``simulate_hier``.  Reproduction status: EXPERIMENTS.md §Repro;
+composition semantics: DESIGN.md §8.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PolicyParams, simulate
+from repro.core.distributions import Erlang, Exponential
+from repro.core.hierarchy import (HierTrace, make_hier_trace, simulate_hier)
+from repro.core.refsim import simulate_hier_ref
+from repro.core.trace import Trace
+from repro.data.traces import SyntheticSpec, synthetic_trace
+
+SPEC = SyntheticSpec(n_objects=30, n_requests=900, rate=400.0,
+                     size_min=1.0, size_max=12.0,
+                     latency_base=0.01, latency_per_mb=2e-3)
+
+
+def _trace(seed=0):
+    return synthetic_trace(jax.random.key(seed), SPEC)
+
+
+def _hier(seed=0, n_shards=3, route="random", hop_mean=0.004, **kw):
+    return make_hier_trace(_trace(seed), n_shards, key=jax.random.key(99),
+                           hop_mean=hop_mean, hop_dist=Erlang(k=4),
+                           route=route, **kw)
+
+
+def test_degenerate_hierarchy_is_bitwise_single_tier():
+    """n_shards=1, empty L2, zero hop: the L2 is a pass-through and the
+    hierarchy must reproduce single-tier ``simulate`` bit-for-bit."""
+    tr = _trace()
+    ht = make_hier_trace(tr, 1, hop_mean=0.0)
+    hr = simulate_hier(ht, 1, 100.0, 0.0, "stoch_vacdh", estimate_z=True)
+    sr = simulate(tr, 100.0, "stoch_vacdh", estimate_z=True)
+    assert float(hr.total_latency) == float(sr.total_latency)
+    assert int(hr.n_hits) == int(sr.n_hits)
+    assert int(hr.n_delayed) == int(sr.n_delayed)
+    assert int(hr.n_misses) == int(sr.n_misses)
+    assert int(np.sum(np.asarray(hr.per_shard.n_evictions))) == \
+        int(sr.n_evictions)
+
+
+@pytest.mark.parametrize("policy", ["lru", "lhd", "vacdh", "stoch_vacdh",
+                                    "lru_mad"])
+@pytest.mark.parametrize("route", ["hash", "random"])
+def test_hier_scan_matches_event_driven(policy, route):
+    """The shard-vmapped scan must agree with the two-tier heap oracle."""
+    ht = _hier(route=route)
+    got = simulate_hier(ht, 3, 30.0, 90.0, policy, l2_policy="lru")
+    ref = simulate_hier_ref(ht, 3, 30.0, 90.0, policy, l2_policy="lru")
+    assert int(got.n_hits) == ref["n_hits"]
+    assert int(got.n_delayed) == ref["n_delayed"]
+    assert int(got.n_misses) == ref["n_misses"]
+    assert int(np.sum(np.asarray(got.per_shard.n_evictions))) == \
+        ref["n_evictions"]
+    for f, k in (("n_hits", "n_hits"), ("n_delayed", "n_delayed"),
+                 ("n_misses", "n_misses"), ("n_evictions", "n_evictions")):
+        assert int(getattr(got.l2, f)) == ref["l2"][k], f"l2 {f}"
+    np.testing.assert_allclose(float(got.total_latency),
+                               ref["total_latency"], rtol=2e-4)
+    np.testing.assert_allclose(float(got.l2.total_latency),
+                               ref["l2"]["total_latency"], rtol=2e-4)
+    # per-shard breakdown, not just aggregates
+    for s in range(3):
+        for f in ("n_hits", "n_delayed", "n_misses"):
+            assert int(getattr(got.per_shard, f)[s]) == \
+                ref["per_shard"][s][f], (s, f)
+
+
+def test_l2_arrivals_are_exactly_l1_misses():
+    ht = _hier()
+    r = simulate_hier(ht, 3, 25.0, 80.0, "stoch_vacdh")
+    l2_arrivals = int(r.l2.n_hits) + int(r.l2.n_delayed) + int(r.l2.n_misses)
+    assert l2_arrivals == int(r.n_misses)
+    assert int(r.n_requests) == SPEC.n_requests
+
+
+def test_l2_capacity_absorbs_latency():
+    """A warm L2 must strictly reduce end-to-end latency vs an empty one
+    (same draws: pre-drawn randomness makes the comparison paired)."""
+    ht = _hier(n_shards=4)
+    cold = simulate_hier(ht, 4, 20.0, 0.0, "lru")
+    warm = simulate_hier(ht, 4, 20.0, 200.0, "lru")
+    assert int(warm.l2.n_hits) > 0
+    assert float(warm.total_latency) < float(cold.total_latency)
+
+
+def test_hash_routing_is_object_consistent():
+    ht = _hier(route="hash")
+    objs = np.asarray(ht.objs)
+    shards = np.asarray(ht.shards)
+    for o in np.unique(objs):
+        assert len(np.unique(shards[objs == o])) == 1
+    # and it actually spreads objects across shards
+    assert len(np.unique(shards)) == 3
+
+
+def test_hash_routing_mixes_structured_ids():
+    """The hash must use the product's high bits: a plain modulo of the
+    Knuth multiplier degenerates to ``objs % n_shards`` and colocates
+    structured id sets (e.g. all-even ids on even shard counts)."""
+    times = np.arange(1.0, 201.0, dtype=np.float32)
+    objs = (np.arange(200) % 50) * 2          # only even ids
+    tr = Trace(jnp.asarray(times), jnp.asarray(objs, jnp.int32),
+               jnp.ones(100), jnp.full(100, 0.01),
+               jnp.full(200, 0.01))
+    for n_shards in (2, 4):
+        ht = make_hier_trace(tr, n_shards, route="hash")
+        assert len(np.unique(np.asarray(ht.shards))) == n_shards
+
+
+def test_shard_count_mismatch_rejected():
+    """A trace routed for 4 shards must not silently drop requests when
+    simulated with 2 (shards 2-3 would never be served)."""
+    ht = make_hier_trace(_trace(), 4, route="random")
+    with pytest.raises(ValueError, match="n_shards=2"):
+        simulate_hier(ht, 2, 10.0, 10.0)
+    from repro.core import sweep_hier_grid
+    with pytest.raises(ValueError, match="n_shards=2"):
+        sweep_hier_grid(ht, 2, 10.0, 10.0, "lru")
+
+
+def test_bad_route_shards_and_policies_rejected():
+    tr = _trace()
+    with pytest.raises(ValueError, match="route"):
+        make_hier_trace(tr, 2, route="round_robin")
+    ht = make_hier_trace(tr, 2)
+    with pytest.raises(ValueError, match="n_shards"):
+        simulate_hier(ht, 0, 10.0, 10.0)
+    with pytest.raises(ValueError, match="unknown policy"):
+        simulate_hier(ht, 2, 10.0, 10.0, l2_policy="lur")
+
+
+def test_l2_params_default_is_decoupled_from_l1_params():
+    """simulate_hier(params=p) must leave the L2 on stock PolicyParams —
+    the sweep engine holds ONE L2 per grid while sweeping the L1 params
+    axis, and the parity contract needs both sides to agree."""
+    ht = _hier()
+    p = PolicyParams(omega=3.0, window=8)
+    a = simulate_hier(ht, 3, 30.0, 90.0, "stoch_vacdh",
+                      l2_policy="stoch_vacdh", params=p)
+    b = simulate_hier(ht, 3, 30.0, 90.0, "stoch_vacdh",
+                      l2_policy="stoch_vacdh", params=p,
+                      l2_params=PolicyParams())
+    assert float(a.total_latency) == float(b.total_latency)
+    c = simulate_hier(ht, 3, 30.0, 90.0, "stoch_vacdh",
+                      l2_policy="stoch_vacdh", params=p, l2_params=p)
+    assert float(a.l2.total_latency) != float(c.l2.total_latency)

@@ -90,6 +90,124 @@ def test_engine_hedging_reduces_tail_latency():
     assert hedged.total_latency < base.total_latency
 
 
+def test_hedging_model_is_min_of_first_draw_and_hedged_retry():
+    """The sim-clock hedging model is min(Z1, t_hedge + Z2'): reproduce the
+    engine's draw stream with an identically-seeded rng and check the served
+    miss latency equals the formula exactly."""
+    lm = LatencyModel(base_s=0.2, per_token_s=0.0, stochastic=True,
+                      hedge_quantile=0.95)
+    deadline = lm.hedge_deadline(10)
+    # Exp quantile: -m * ln(1 - q)
+    assert deadline == pytest.approx(-0.2 * np.log(0.05))
+    hedged = unhedged = 0
+    for seed in range(40):
+        eng = ServeEngine(capacity=1.0, policy="lru", latency=lm,
+                          state_size_fn=lambda n: 1.0, hedging=True,
+                          seed=seed)
+        lat = eng.request(0.0, "k", 10)
+        shadow = np.random.default_rng(seed)
+        z1 = lm.draw(shadow, 10)
+        if z1 > deadline:
+            z2 = lm.draw(shadow, 10)
+            assert lat == pytest.approx(min(z1, deadline + z2))
+            assert eng.stats.hedges == 1
+            hedged += 1
+        else:
+            assert lat == pytest.approx(z1)
+            assert eng.stats.hedges == 0
+            unhedged += 1
+    assert hedged > 0 and unhedged > 0   # both branches exercised
+
+
+def test_hedged_fetch_never_slower_than_first_draw():
+    lm = LatencyModel(base_s=0.1, per_token_s=0.0, stochastic=True)
+    for seed in range(30):
+        eng = ServeEngine(capacity=1.0, policy="lru", latency=lm,
+                          state_size_fn=lambda n: 1.0, hedging=True,
+                          seed=seed)
+        lat = eng.request(0.0, "k", 5)
+        z1 = lm.draw(np.random.default_rng(seed), 5)
+        assert lat <= z1 + 1e-12
+
+
+def test_engine_hierarchy_mode_composes_delayed_hit_queues():
+    """Two L1 edge engines sharing one L2: an L1 miss resolves as
+    hop + R_L2(t), and concurrent misses from *different* L1s overlap on
+    the same L2 in-flight fetch (cross-shard L2 delayed hit)."""
+    det = LatencyModel(base_s=1.0, per_token_s=0.0, stochastic=False)
+    l2 = ServeEngine(capacity=100.0, policy="lru", latency=det,
+                     state_size_fn=lambda n: 1.0, hedging=False)
+    mk_l1 = lambda: ServeEngine(capacity=100.0, policy="lru",
+                                state_size_fn=lambda n: 1.0,
+                                l2=l2, hop_s=0.01)
+    l1a, l1b = mk_l1(), mk_l1()
+    # t=0: a misses; L2 misses (origin fetch completes at t=1).
+    assert l1a.request(0.0, "p", 10) == pytest.approx(1.01)
+    # t=0.4: b misses; L2 delayed hit — residual 0.6 plus the hop.
+    assert l1b.request(0.4, "p", 10) == pytest.approx(0.61)
+    # after both L1 prefill completions, both serve hits locally.
+    assert l1a.request(2.0, "p", 10) == 0.0
+    assert l1b.request(2.0, "p", 10) == 0.0
+    s2 = l2.stats.as_dict()
+    assert (s2["misses"], s2["delayed_hits"], s2["hits"]) == (1, 1, 0)
+    assert l1a.stats.hedges == 0        # hedging disabled in hierarchy mode
+
+
+def test_engine_hierarchy_warm_l2_serves_fast_refetch():
+    """Once the L2 holds the prefix, a fresh L1 miss costs only the hop."""
+    det = LatencyModel(base_s=1.0, per_token_s=0.0, stochastic=False)
+    l2 = ServeEngine(capacity=100.0, policy="lru", latency=det,
+                     state_size_fn=lambda n: 1.0, hedging=False)
+    l1 = ServeEngine(capacity=1.0, policy="lru",
+                     state_size_fn=lambda n: 2.0,   # never L1-admissible
+                     l2=l2, hop_s=0.05)
+    assert l1.request(0.0, "p", 10) == pytest.approx(1.05)
+    # L2 admits at t=1; the L1 copy was never admitted (size > capacity),
+    # so the re-request misses at L1 again but hits the warm L2.
+    assert l1.request(5.0, "p", 10) == pytest.approx(0.05)
+    assert l2.stats.hits == 1
+
+
+def _stub_steps(next_token):
+    """(prefill, decode) stubs emitting argmax == next_token(pos)."""
+    def logits_for(tok):
+        out = np.zeros((1, 1, 8), np.float32)
+        out[0, 0, tok] = 1.0
+        return jnp.asarray(out)
+
+    def prefill(cache, batch):
+        return logits_for(next_token(0)), cache
+
+    def decode(cache, tokens, pos0):
+        return logits_for(next_token(pos0)), cache
+
+    return prefill, decode
+
+
+def test_continuous_batcher_queue_full_rejects():
+    prefill, decode = _stub_steps(lambda pos: 1)
+    b = ContinuousBatcher(SchedulerConfig(max_queue=2), prefill_step=prefill,
+                          decode_step=decode, init_cache=lambda b_, cap: None)
+    b.submit(Request(rid=0, tokens=np.array([1]), max_new=2))
+    b.submit(Request(rid=1, tokens=np.array([1]), max_new=2))
+    with pytest.raises(RuntimeError, match="queue full"):
+        b.submit(Request(rid=2, tokens=np.array([1]), max_new=2))
+
+
+def test_continuous_batcher_eos_stops_decode_early():
+    eos = 7
+    prefill, decode = _stub_steps(lambda pos: eos if pos >= 2 else 3)
+    b = ContinuousBatcher(SchedulerConfig(max_batch=2), prefill_step=prefill,
+                          decode_step=decode, init_cache=lambda b_, cap: None,
+                          eos_id=eos)
+    r = Request(rid=0, tokens=np.array([1, 2]), max_new=10)
+    b.submit(r)
+    assert b.drain() == 1
+    assert r.done
+    assert r.out[-1] == eos
+    assert len(r.out) < 10              # stopped well before max_new
+
+
 def test_prefix_cache_stats_mirror_core_ranking():
     c = DelayedHitPrefixCache(10.0, "stoch_vacdh")
     for t in (1.0, 2.0, 3.0):

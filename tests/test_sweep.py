@@ -10,7 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (Erlang, PolicyParams, simulate, sweep_grid)
+from repro.core import (Erlang, PolicyParams, make_hier_trace, simulate,
+                        simulate_hier, sweep_grid, sweep_hier_grid)
 from repro.data.traces import SyntheticSpec, synthetic_trace
 
 SPEC = SyntheticSpec(n_objects=40, n_requests=2500, rate=600.0,
@@ -127,6 +128,68 @@ def test_kernel_rejected_for_multi_policy():
     with pytest.raises(ValueError, match="single-policy"):
         sweep_grid(_trace(), 100.0, ["lru", "stoch_vacdh"], [PolicyParams()],
                    use_kernel="ref")
+
+
+def _assert_hier_point_matches(g, ht, n_shards, names, params_list, c1s, c2s,
+                               seeds, l2_policy="lru"):
+    for li, pol in enumerate(names):
+        for pi, p in enumerate(params_list):
+            for i1, c1 in enumerate(c1s):
+                for i2, c2 in enumerate(c2s):
+                    for si, s in enumerate(seeds):
+                        ref = simulate_hier(ht, n_shards, c1, c2, pol,
+                                            l2_policy=l2_policy, params=p,
+                                            key=jax.random.key(s))
+                        got = g.point(0, li, pi, i1, i2, si)
+                        for fg, fr in zip(got.per_shard, ref.per_shard):
+                            np.testing.assert_array_equal(
+                                np.asarray(fg), np.asarray(fr),
+                                err_msg=f"{pol} per_shard")
+                        for fg, fr in zip(got.l2, ref.l2):
+                            assert float(fg) == float(fr), (pol, "l2")
+
+
+def test_hier_single_policy_grid_bitwise_matches_simulate_hier():
+    """Hierarchy sweep points == per-point simulate_hier, bitwise — the
+    same contract as the single-tier engine (DESIGN.md §8)."""
+    ht = make_hier_trace(_trace(), 3, hop_mean=0.004, route="random",
+                         key=jax.random.key(5))
+    params = [PolicyParams(omega=o) for o in (0.0, 1.0)]
+    c1s, c2s = [20.0, 40.0], [0.0, 90.0]
+    g = sweep_hier_grid(ht, 3, c1s, c2s, "stoch_vacdh", params)
+    assert g.result.l2.total_latency.shape == (1, 1, 2, 2, 2, 1)
+    assert g.result.per_shard.total_latency.shape == (1, 1, 2, 2, 2, 1, 3)
+    _assert_hier_point_matches(g, ht, 3, ["stoch_vacdh"], params, c1s, c2s,
+                               [0])
+
+
+def test_hier_multi_policy_grid_bitwise_matches_simulate_hier():
+    ht = make_hier_trace(_trace(), 2, hop_mean=0.002, route="hash")
+    names = ["lru", "vacdh", "stoch_vacdh"]
+    params = [PolicyParams(omega=1.0)]
+    g = sweep_hier_grid(ht, 2, 30.0, 90.0, names, params, lane_bucket=4)
+    assert g.result.l2.total_latency.shape == (1, 3, 1, 1, 1, 1)
+    _assert_hier_point_matches(g, ht, 2, names, params, [30.0], [90.0], [0])
+
+
+def test_hier_params_axis_with_params_sensitive_l2_stays_bitwise():
+    """The L2 runs ONE params setting while the L1 params axis sweeps; with
+    a params-sensitive L2 policy the decoupled l2_params default must keep
+    every point bitwise equal to per-point simulate_hier."""
+    ht = make_hier_trace(_trace(), 2, hop_mean=0.003, route="random",
+                         key=jax.random.key(1))
+    params = [PolicyParams(omega=o) for o in (0.0, 2.0)]
+    g = sweep_hier_grid(ht, 2, 25.0, 70.0, "stoch_vacdh", params,
+                        l2_policy="stoch_vacdh")
+    _assert_hier_point_matches(g, ht, 2, ["stoch_vacdh"], params, [25.0],
+                               [70.0], [0], l2_policy="stoch_vacdh")
+
+
+def test_hier_aggregate_properties_reduce_shard_axis():
+    ht = make_hier_trace(_trace(), 2, hop_mean=0.002)
+    g = sweep_hier_grid(ht, 2, 30.0, [0.0, 90.0], "lru")
+    assert g.result.total_latency.shape == (1, 1, 1, 1, 2, 1)
+    assert np.all(np.asarray(g.result.n_requests) == SPEC.n_requests)
 
 
 def test_kernel_scored_single_policy_sweep_matches():

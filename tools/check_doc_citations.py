@@ -1,10 +1,21 @@
 #!/usr/bin/env python3
-"""Fail CI when code cites a DESIGN.md / EXPERIMENTS.md section that
-doesn't exist.
+"""Keep DESIGN.md / EXPERIMENTS.md sections and their citations in sync.
 
-Code and docs cite sections as ``DESIGN.md §3`` / ``EXPERIMENTS.md §Perf``;
-the docs declare sections as markdown headings containing ``§<id>``
-(e.g. ``## §3 ...``).  Run from the repository root (CI does).
+Two failure modes:
+
+1. **Dangling citation** — code or docs cite ``DESIGN.md §3`` /
+   ``EXPERIMENTS.md §Perf`` but no such section heading exists.
+2. **Uncited section** — a ``§<id>`` section is declared but cited from
+   nowhere outside its own document.  Sections exist to be load-bearing;
+   a section nothing points at is either dead or missing its anchors.
+
+Scanned files: every ``*.py`` / ``*.md`` under the repository root —
+``src/``, ``benchmarks/``, ``tests/``, ``tools/``, plus ``README.md`` and
+``examples/`` — excluding dotdirs, ``__pycache__``, ``results/``, and
+``ISSUE.md`` (a task spec may cite sections that do not exist *yet*).
+The docs declare sections as markdown headings containing ``§<id>``
+(e.g. ``## §3 ...``).  Run from the repository root (CI does, in the same
+job as the tests).
 """
 from __future__ import annotations
 
@@ -17,6 +28,8 @@ DOCS = ("DESIGN.md", "EXPERIMENTS.md")
 CITE_RE = re.compile(r"(DESIGN|EXPERIMENTS)\.md\s+§([A-Za-z0-9_.-]+)")
 HEADING_RE = re.compile(r"^#{1,6}.*§([A-Za-z0-9_.-]+)", re.MULTILINE)
 SCAN_SUFFIXES = {".py", ".md"}
+SKIP_FILES = {"ISSUE.md"}
+SKIP_PARTS = ("results", "__pycache__")
 
 
 def declared_sections(doc: pathlib.Path) -> set[str]:
@@ -25,30 +38,51 @@ def declared_sections(doc: pathlib.Path) -> set[str]:
     return set(HEADING_RE.findall(doc.read_text()))
 
 
-def main() -> int:
-    sections = {d.split(".")[0]: declared_sections(ROOT / d) for d in DOCS}
-    failures = []
-    for path in ROOT.rglob("*"):
+def scan_files():
+    for path in sorted(ROOT.rglob("*")):
+        rel = path.relative_to(ROOT)
         if path.suffix not in SCAN_SUFFIXES or not path.is_file():
             continue
-        if any(part.startswith(".") or part in ("results", "__pycache__")
-               for part in path.relative_to(ROOT).parts):
+        if any(part.startswith(".") or part in SKIP_PARTS
+               for part in rel.parts):
             continue
+        if rel.name in SKIP_FILES:
+            continue
+        yield path, rel
+
+
+def main() -> int:
+    sections = {d.split(".")[0]: declared_sections(ROOT / d) for d in DOCS}
+    cited: dict[tuple[str, str], set[str]] = {}
+    failures = []
+    for path, rel in scan_files():
         for m in CITE_RE.finditer(path.read_text(errors="ignore")):
             # sentence punctuation is not part of the section id
             doc, sec = m.group(1), m.group(2).rstrip(".-")
             if not (ROOT / f"{doc}.md").exists():
-                failures.append(f"{path.relative_to(ROOT)}: cites {doc}.md "
-                                f"§{sec} but {doc}.md does not exist")
+                failures.append(f"{rel}: cites {doc}.md §{sec} but "
+                                f"{doc}.md does not exist")
             elif sec not in sections[doc]:
-                failures.append(f"{path.relative_to(ROOT)}: cites {doc}.md "
-                                f"§{sec} but no such section heading")
+                failures.append(f"{rel}: cites {doc}.md §{sec} but no such "
+                                f"section heading")
+            else:
+                cited.setdefault((doc, sec), set()).add(rel.name)
+    for doc in DOCS:
+        stem = doc.split(".")[0]
+        for sec in sorted(sections[stem]):
+            citers = cited.get((stem, sec), set()) - {doc}
+            if not citers:
+                failures.append(
+                    f"{doc}: declares §{sec} but nothing outside {doc} "
+                    f"cites it — add anchors or fold the section away")
     if failures:
-        print("dangling documentation citations:")
+        print("documentation citation failures:")
         for f in failures:
             print("  " + f)
         return 1
-    print("all DESIGN.md/EXPERIMENTS.md section citations resolve")
+    n = sum(len(v) for v in cited.values())
+    print(f"doc citations OK: {n} citations resolve, every declared "
+          f"section is cited")
     return 0
 
 
