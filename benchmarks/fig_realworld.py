@@ -1,0 +1,142 @@
+"""Real-world-scale replay (the paper's §5 headline setting, grown to the
+ROADMAP's million-user scale): a ≥1M-request generated-realistic trace —
+epoch-scale f64 timestamps, Zipf-over-200k-keys popularity, diurnal rate,
+lognormal sizes — round-tripped through the packed binary trace format,
+compacted to a dense universe (top-K + recycled cold-tail pool), and
+replayed through the FULL policy roster with the streaming chunked engine
+(DESIGN.md §9).  Records throughput (req/s) and peak RSS per replay, plus a
+compaction-sensitivity probe for the accuracy contract
+(EXPERIMENTS.md §Scale).
+
+The epoch-scale clock means the in-memory f32 ``Trace`` path *cannot*
+replay this workload faithfully (sub-ms gaps vanish past ~2^24 s); the
+``mode=device`` comparison row therefore runs on a rebased-to-zero copy and
+exists only to price the streaming dispatch overhead.
+"""
+from __future__ import annotations
+
+import argparse
+import resource
+import time
+
+import numpy as np
+
+from repro.core import PolicyParams, simulate, simulate_stream
+from repro.core.trace import trace_of_stream
+from repro.data.traces import (RealWorldSpec, compact_requests,
+                               load_trace_bin, realworld_raw, save_trace_bin)
+
+from .common import POLICY_SET, RESULTS_DIR, emit
+
+CHUNK_SIZE = 131_072
+
+
+def _peak_rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _replay_rows(stream, capacity, policies, *, extra, chunk_size=CHUNK_SIZE,
+                 estimate_z=True) -> list[dict]:
+    rows = []
+    lru_lat = None
+    for pol in (["lru"] + [p for p in policies if p != "lru"]):
+        t0 = time.time()
+        r = simulate_stream(stream, capacity, pol,
+                            PolicyParams(omega=1.0),
+                            estimate_z=estimate_z, chunk_size=chunk_size)
+        wall = time.time() - t0
+        lat = float(r.total_latency)
+        if lru_lat is None:
+            lru_lat = lat
+        rows.append(dict(
+            policy=pol,
+            latency=round(lat, 4),
+            improvement_vs_lru=round((lru_lat - lat) / lru_lat, 5),
+            hit_ratio=round(float(r.hit_ratio), 4),
+            delayed_ratio=round(float(r.n_delayed)
+                                / max(float(r.n_requests), 1), 4),
+            sim_s=round(wall, 2),
+            req_per_s=int(stream.n_requests / wall),
+            peak_rss_mb=round(_peak_rss_mb(), 1),
+            **extra))
+    return rows
+
+
+def run(full: bool = False) -> list[dict]:
+    n_req = 5_000_000 if full else 1_000_000
+    spec = RealWorldSpec(n_requests=n_req, n_keys=200_000, seed=0)
+    t0 = time.time()
+    raw = realworld_raw(spec)
+    gen_s = time.time() - t0
+
+    # round-trip the packed binary format — the ingestion path under test
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    path = RESULTS_DIR / "realworld_trace.bin"
+    t0 = time.time()
+    save_trace_bin(path, raw)
+    raw = load_trace_bin(path)
+    io_s = time.time() - t0
+
+    t0 = time.time()
+    stream, stats = compact_requests(raw, top_k=4096, n_recycle=512)
+    compact_s = time.time() - t0
+    footprint = float(stream.sizes.sum())
+    capacity = 0.1 * footprint
+    print(f"# trace: {n_req} requests, {stats.n_unique} unique keys -> "
+          f"{stats.n_objects} dense objects (tail mass "
+          f"{stats.tail_mass:.3f}); gen {gen_s:.1f}s, bin io {io_s:.1f}s, "
+          f"compact {compact_s:.1f}s; cache = 10% of "
+          f"{footprint:.0f} MB footprint")
+    meta = dict(n_requests=n_req, n_objects=stats.n_objects,
+                tail_mass=round(stats.tail_mass, 4),
+                capacity=round(capacity, 1))
+
+    rows = _replay_rows(stream, capacity, POLICY_SET,
+                        extra=dict(section="roster", mode="stream", **meta))
+
+    # streaming dispatch overhead vs the monolithic device scan: same
+    # arithmetic, trace rebased to t=0 so the f32 device clock is usable
+    early = stream._replace(times=stream.times - stream.times[0])
+    trace = trace_of_stream(early)
+    t0 = time.time()
+    r = simulate(trace, capacity, "stoch_vacdh", PolicyParams(omega=1.0),
+                 estimate_z=True)
+    float(r.total_latency)
+    wall = time.time() - t0
+    rows.append(dict(policy="stoch_vacdh", latency=round(
+        float(r.total_latency), 4), sim_s=round(wall, 2),
+        req_per_s=int(n_req / wall), peak_rss_mb=round(_peak_rss_mb(), 1),
+        section="overhead", mode="device", **meta))
+
+    # compaction accuracy contract, measured: how much does shrinking the
+    # hot set move the headline improvement?  (probe on a prefix so the
+    # full-roster replay above stays the wall-clock budget's big item)
+    probe_n = min(250_000, n_req)
+    praw = raw.__class__(raw.times[:probe_n], raw.keys[:probe_n],
+                         raw.sizes[:probe_n])
+    probes = [compact_requests(praw, top_k=k, n_recycle=512)
+              for k in (1024, 4096, 16_384)]
+    # one FIXED absolute capacity across the top_k axis (10% of the middle
+    # setting's footprint) — a per-footprint capacity would confound the
+    # compaction effect with a cache-size sweep
+    pcap = 0.1 * float(probes[1][0].sizes.sum())
+    for (pstream, pstats), top_k in zip(probes, (1024, 4096, 16_384)):
+        rows += _replay_rows(
+            pstream, pcap, ["lru", "stoch_vacdh"],
+            extra=dict(section="compaction", mode="stream", top_k=top_k,
+                       capacity_probe=round(pcap, 1),
+                       n_objects_probe=pstats.n_objects,
+                       tail_mass_probe=round(pstats.tail_mass, 4)))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="5M requests instead of 1M")
+    args = ap.parse_args()
+    emit(run(full=args.full), "fig_realworld")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,7 +29,8 @@ def main() -> int:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slower)")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2,fig3,fig4,fig5,fig6,kernels")
+                    help="comma list: fig2,fig3,fig4,fig5,fig6,realworld,"
+                         "kernels")
     ap.add_argument("--no-compile-cache", action="store_true",
                     help="disable the persistent XLA compilation cache")
     args = ap.parse_args()
@@ -38,7 +39,8 @@ def main() -> int:
     want = set(args.only.split(",")) if args.only else None
 
     from . import (bench_kernels, fig2_synthetic, fig3_trace_stats,
-                   fig4_sensitivity, fig5_real_traces, fig6_hierarchy)
+                   fig4_sensitivity, fig5_real_traces, fig6_hierarchy,
+                   fig_realworld)
     from .common import emit
 
     jobs = [
@@ -51,6 +53,8 @@ def main() -> int:
                               "fig5_real_traces")),
         ("fig6", lambda: emit(fig6_hierarchy.run(full=args.full),
                               "fig6_hierarchy")),
+        ("realworld", lambda: emit(fig_realworld.run(full=args.full),
+                                   "fig_realworld")),
         ("kernels", lambda: emit(bench_kernels.run(), "bench_kernels")),
     ]
     for name, fn in jobs:

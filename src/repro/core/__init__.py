@@ -15,11 +15,14 @@ from .delay_stats import (agg_mean_from_moments, agg_var_from_moments,
 from .distributions import (DISTRIBUTIONS, Deterministic, Erlang, Exponential,
                             Hyperexponential, MissLatency, MonteCarlo,
                             make_distribution)
-from .hierarchy import HierResult, HierTrace, make_hier_trace, simulate_hier
+from .hierarchy import (HierResult, HierTrace, make_hier_trace,
+                        simulate_hier, simulate_hier_chunked)
 from .ranking import BASELINES, OURS, POLICIES, Policy, PolicyParams
-from .simulator import SimResult, latency_improvement, simulate
+from .simulator import (SimResult, latency_improvement, simulate,
+                        simulate_chunked, simulate_stream)
 from .sweep import HierSweepGrid, SweepGrid, sweep_grid, sweep_hier_grid
-from .trace import Trace, make_trace
+from .trace import (RequestStream, Trace, make_trace, stream_of_trace,
+                    trace_of_stream)
 
 __all__ = [
     "agg_mean_from_moments", "agg_var_from_moments",
@@ -28,7 +31,10 @@ __all__ = [
     "Hyperexponential", "MissLatency", "MonteCarlo", "make_distribution",
     "BASELINES", "OURS", "POLICIES", "Policy", "PolicyParams",
     "HierResult", "HierTrace", "make_hier_trace", "simulate_hier",
-    "SimResult", "latency_improvement", "simulate",
+    "simulate_hier_chunked",
+    "SimResult", "latency_improvement", "simulate", "simulate_chunked",
+    "simulate_stream",
     "HierSweepGrid", "SweepGrid", "sweep_grid", "sweep_hier_grid",
-    "Trace", "make_trace",
+    "RequestStream", "Trace", "make_trace", "stream_of_trace",
+    "trace_of_stream",
 ]

@@ -127,7 +127,15 @@ def mc_aggregate_delay(key: jax.Array, lam: float, z: float, n: int,
 def mc_moments(key: jax.Array, lam: float, z: float, n: int,
                stochastic: bool = True,
                sampler=None) -> tuple[jax.Array, jax.Array]:
-    """Monte-Carlo (mean, variance) of D with ``n`` samples."""
+    """Monte-Carlo (mean, variance) of D with ``n`` samples.
+
+    Variance is the **population** convention (divide by n) — the single
+    convention used repo-wide (DESIGN.md §3): the online estimator
+    ``ranking.agg_std_hat`` and every analytic formula target population
+    moments, so the oracle must too.  At the n >= 4e5 sample sizes the
+    validation tests use, the sample-variance correction n/(n-1) is ~2e-6
+    — far below the tolerances — but mixing conventions is exactly the
+    kind of silent drift the tests exist to catch."""
     d = mc_aggregate_delay(key, lam, z, n, stochastic=stochastic,
                            sampler=sampler)
-    return d.mean(), d.var(ddof=1)
+    return d.mean(), d.var(ddof=0)

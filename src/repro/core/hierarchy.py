@@ -39,15 +39,17 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .distributions import Deterministic, MissLatency
 from .ranking import POLICIES, PolicyParams
 from .simulator import (SimResult, _behavior_multi, _behavior_static,
-                        _commit_due, _commit_one, _serve)
+                        _commit_due, _commit_one, _serve, _tree_sel)
 from .state import SimState, init_state
 from .trace import Trace
 
-__all__ = ["HierTrace", "HierResult", "make_hier_trace", "simulate_hier"]
+__all__ = ["HierTrace", "HierResult", "make_hier_trace", "simulate_hier",
+           "simulate_hier_chunked"]
 
 # Knuth multiplicative hash — a stand-in for a consistent-hash ring: the
 # shard of an object is a fixed pseudo-random function of its id, stable
@@ -180,11 +182,6 @@ def check_shards(trace: HierTrace, n_shards: int) -> None:
             f"rebuild the trace with make_hier_trace(trace, {n_shards})")
 
 
-def _tree_sel(flag, new, old):
-    """Pytree-wide flag select (works on typed PRNG key leaves)."""
-    return jax.tree.map(lambda a, b: jnp.where(flag, a, b), new, old)
-
-
 def _commit_due_stacked(b, p, estimate_z, stacked: SimState, sizes, t):
     """Lazy-commit for the vmapped shard axis.
 
@@ -204,6 +201,56 @@ def _commit_due_stacked(b, p, estimate_z, stacked: SimState, sizes, t):
         stacked)
 
 
+def _hier_init(trace: HierTrace, l1_capacity, l2_capacity, key,
+               n_shards: int):
+    """Fresh (stacked-L1, L2) carry for a hierarchy run — shared by the
+    single-scan body and the chunked streaming driver so both start from
+    bit-identical states (same key split, same priors)."""
+    keys = jax.random.split(key, n_shards + 1)
+    # L1's fetch-latency prior: hop + origin mean (the true mean lies below
+    # once the L2 starts hitting; estimate_z adapts it online).
+    l1_prior = trace.hop_mean + trace.z_mean
+    l1 = jax.vmap(lambda k: init_state(trace.n_objects, l1_capacity, k,
+                                       l1_prior))(keys[:n_shards])
+    l2 = init_state(trace.n_objects, l2_capacity, keys[n_shards],
+                    trace.z_mean)
+    return l1, l2
+
+
+def _hier_step(b1, b2, p1, p2, estimate_z, sizes, shard_ids, carry,
+               t, i, s, z, hop, valid=True):
+    """One interleaved-request step of the two-tier machinery.
+
+    ``valid`` is a python ``True`` on the single-scan path (constant-folds
+    to exactly the pre-chunking graph) or a traced bool on the chunked
+    path, where padded steps must not serve either tier — their commits
+    are already no-ops because padded steps carry ``t = -inf``
+    (DESIGN.md §9)."""
+    l1, l2 = carry
+
+    # --- lazy commits, per tier (independent states, any order) ----------
+    l2 = _commit_due(b2, p2, estimate_z, l2, sizes, t)
+    l1 = _commit_due_stacked(b1, p1, estimate_z, l1, sizes, t)
+
+    # --- does the request miss at its L1 shard? --------------------------
+    is_l1_miss = ~(l1.obj.cached[s, i] | l1.obj.in_flight[s, i])
+
+    # --- conditional L2 arrival: resolution time R_L2(t) -----------------
+    l2_served, l2_lat = _serve(b2, p2, l2, sizes, t, i, z)
+    serve_l2 = is_l1_miss if valid is True else valid & is_l1_miss
+    l2 = _tree_sel(serve_l2, l2_served, l2)
+    z_eff = hop + jnp.where(is_l1_miss, l2_lat, 0.0)
+
+    # --- serve at the owning L1 shard (one-hot over the shard axis) ------
+    def serve_one(st, active):
+        new, _ = _serve(b1, p1, st, sizes, t, i, z_eff)
+        return _tree_sel(active, new, st)
+
+    owner = shard_ids == s
+    l1 = jax.vmap(serve_one)(l1, owner if valid is True else owner & valid)
+    return l1, l2
+
+
 def _simulate_hier_impl(trace: HierTrace, l1_capacity, l2_capacity, key,
                         b1, b2, p1: PolicyParams, p2: PolicyParams,
                         estimate_z: bool, n_shards: int) -> HierResult:
@@ -215,39 +262,13 @@ def _simulate_hier_impl(trace: HierTrace, l1_capacity, l2_capacity, key,
     sweep-engine batching bitwise-transparent on top.
     """
     sizes = trace.sizes
-    keys = jax.random.split(key, n_shards + 1)
-    # L1's fetch-latency prior: hop + origin mean (the true mean lies below
-    # once the L2 starts hitting; estimate_z adapts it online).
-    l1_prior = trace.hop_mean + trace.z_mean
-    l1 = jax.vmap(lambda k: init_state(trace.n_objects, l1_capacity, k,
-                                       l1_prior))(keys[:n_shards])
-    l2 = init_state(trace.n_objects, l2_capacity, keys[n_shards],
-                    trace.z_mean)
+    l1, l2 = _hier_init(trace, l1_capacity, l2_capacity, key, n_shards)
     shard_ids = jnp.arange(n_shards)
 
     def step(carry, req):
-        l1, l2 = carry
         t, i, s, z, hop = req
-
-        # --- lazy commits, per tier (independent states, any order) ------
-        l2 = _commit_due(b2, p2, estimate_z, l2, sizes, t)
-        l1 = _commit_due_stacked(b1, p1, estimate_z, l1, sizes, t)
-
-        # --- does the request miss at its L1 shard? ----------------------
-        is_l1_miss = ~(l1.obj.cached[s, i] | l1.obj.in_flight[s, i])
-
-        # --- conditional L2 arrival: resolution time R_L2(t) -------------
-        l2_served, l2_lat = _serve(b2, p2, l2, sizes, t, i, z)
-        l2 = _tree_sel(is_l1_miss, l2_served, l2)
-        z_eff = hop + jnp.where(is_l1_miss, l2_lat, 0.0)
-
-        # --- serve at the owning L1 shard (one-hot over the shard axis) --
-        def serve_one(st, active):
-            new, _ = _serve(b1, p1, st, sizes, t, i, z_eff)
-            return _tree_sel(active, new, st)
-
-        l1 = jax.vmap(serve_one)(l1, shard_ids == s)
-        return (l1, l2), None
+        return _hier_step(b1, b2, p1, p2, estimate_z, sizes, shard_ids,
+                          carry, t, i, s, z, hop), None
 
     (l1, l2), _ = jax.lax.scan(
         step, (l1, l2),
@@ -321,3 +342,93 @@ def simulate_hier(trace: HierTrace, n_shards: int, l1_capacity: float,
     return _simulate_hier(trace, jnp.float32(l1_capacity),
                           jnp.float32(l2_capacity), key, policy, l2_policy,
                           params, l2_params, estimate_z, int(n_shards))
+
+
+# ---------------------------------------------------------------------------
+# Chunked streaming hierarchy (DESIGN.md §9): the (stacked-L1, L2) carry
+# crosses fixed-size trace chunks with donated device buffers, exactly like
+# the single-tier simulate_chunked.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit,
+                   static_argnames=("policy_name", "l2_policy", "estimate_z",
+                                    "n_shards"),
+                   donate_argnums=(0,))
+def _hier_chunk_jit(carry, times, objs, shards, z_draw, hop_draw, valid,
+                    sizes, params, l2_params, policy_name, l2_policy,
+                    estimate_z, n_shards):
+    """``valid`` is ``None`` (static) on full chunks — the step then
+    constant-folds to exactly the single-scan graph; a padded tail chunk
+    passes the mask and pays the per-step select once."""
+    b1 = _behavior_static(POLICIES[policy_name], params, "rank", onehot=True)
+    b2 = _behavior_static(POLICIES[l2_policy], l2_params, "rank", onehot=True)
+    shard_ids = jnp.arange(n_shards)
+
+    def step(carry, req):
+        t, i, s, z, hop = req[:5]
+        v = req[5] if len(req) == 6 else True
+        return _hier_step(b1, b2, params, l2_params, estimate_z, sizes,
+                          shard_ids, carry, t, i, s, z, hop, valid=v), None
+
+    xs = (times, objs, shards, z_draw, hop_draw)
+    carry, _ = jax.lax.scan(
+        step, carry, xs if valid is None else xs + (valid,))
+    return carry
+
+
+def simulate_hier_chunked(trace: HierTrace, n_shards: int,
+                          l1_capacity: float, l2_capacity: float,
+                          policy: str = "stoch_vacdh",
+                          l2_policy: str = "lru",
+                          params: PolicyParams | None = None,
+                          l2_params: PolicyParams | None = None,
+                          key=None, estimate_z: bool = True,
+                          chunk_size: int = 65536) -> HierResult:
+    """Chunked-carry :func:`simulate_hier`: bitwise-identical results with
+    O(n_shards * n_objects + chunk_size) device residency.  The tail chunk
+    is padded with ``valid=False`` / ``t=-inf`` sentinels (commit loops see
+    a vacuous condition; serves are masked tree-wide), so every chunk runs
+    the same compiled graph and padding never perturbs the carry
+    (tests/test_streaming.py pins equality across chunk sizes)."""
+    if params is None:
+        params = PolicyParams()
+    if l2_params is None:
+        l2_params = PolicyParams()
+    if key is None:
+        key = jax.random.key(0)
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size={chunk_size} must be >= 1")
+    check_shards(trace, n_shards)
+    for name in (policy, l2_policy):
+        if name not in POLICIES:
+            raise ValueError(f"unknown policy {name!r}; known: "
+                             f"{sorted(POLICIES)}")
+    times = np.asarray(trace.times, np.float32)
+    objs = np.asarray(trace.objs, np.int32)
+    shards = np.asarray(trace.shards, np.int32)
+    z_draw = np.asarray(trace.z_draw, np.float32)
+    hop_draw = np.asarray(trace.hop_draw, np.float32)
+    sizes = jnp.asarray(trace.sizes)
+
+    carry = _hier_init(trace, jnp.float32(l1_capacity),
+                       jnp.float32(l2_capacity), key, int(n_shards))
+    n = times.shape[0]
+    for lo in range(0, max(n, 1), chunk_size):
+        hi = min(lo + chunk_size, n)
+        pad = chunk_size - (hi - lo)
+        ext = lambda x, fill, dt: np.concatenate(
+            [x[lo:hi], np.full(pad, fill, dt)])
+        carry = _hier_chunk_jit(
+            carry,
+            jnp.asarray(ext(times, -np.inf, np.float32)),
+            jnp.asarray(ext(objs, 0, np.int32)),
+            jnp.asarray(ext(shards, 0, np.int32)),
+            jnp.asarray(ext(z_draw, 0.0, np.float32)),
+            jnp.asarray(ext(hop_draw, 0.0, np.float32)),
+            None if pad == 0 else jnp.asarray(np.concatenate(
+                [np.ones(hi - lo, bool), np.zeros(pad, bool)])),
+            sizes, params, l2_params, policy, l2_policy, estimate_z,
+            int(n_shards))
+    l1, l2 = carry
+    res = lambda st: SimResult(st.lat_sum, st.n_hits, st.n_delayed,
+                               st.n_misses, st.n_evictions)
+    return HierResult(per_shard=res(l1), l2=res(l2))

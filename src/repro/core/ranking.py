@@ -106,11 +106,30 @@ def residual_hat(o: ObjStats, t: jax.Array,
     synthetic workloads (EXPERIMENTS.md §Beyond).  The selector
     ``p.resid_rate`` is a traced leaf (both estimators are a handful of
     N-vector ops), so 'rate' vs 'recency' can ride a sweep-engine lane axis.
-    Calling with ``p=None`` keeps the legacy rate-estimator behavior."""
+    Calling with ``p=None`` keeps the legacy rate-estimator behavior.
+
+    Cold-start gate: an object scored at the very instant of its own
+    ``last_access`` update — a same-timestamp request, or a fetch committing
+    in the same f32 time slot as the miss that issued it (routine on long
+    real traces, where ``t + z`` rounds back to ``t``) — has age ≈ 0.  The
+    old ``max(age, EPS)`` clamp turned that into a ~1e6x rank inflation
+    that steamrolled the §2.2 compare-admission check (a just-touched
+    incomer evicted arbitrarily good victims).  A just-touched object's
+    expected residual is its mean inter-arrival gap once that is observed
+    (``count >= 2``), and the cold-rate prior ``1/cold_rate`` before; ages
+    above EPS keep the paper's plain recency proxy."""
     if p is None:
         return 1.0 / jnp.maximum(lambda_hat(o, PolicyParams()), EPS)
     rate_r = 1.0 / jnp.maximum(lambda_hat(o, p), EPS)
-    recency_r = jnp.maximum(t - o.last_access, EPS)
+    age = t - o.last_access
+    # the observed mean gap is only a trustworthy residual when it is
+    # itself non-degenerate: an object seen solely at duplicate timestamps
+    # (second-granularity traces) has count >= 2 with gap_mean == 0, which
+    # would reintroduce the EPS inflation through the fallback
+    just_touched = jnp.where((o.count >= 2.0) & (o.gap_mean > EPS),
+                             o.gap_mean,
+                             1.0 / jnp.maximum(p.cold_rate, EPS))
+    recency_r = jnp.where(age > EPS, age, just_touched)
     return jnp.where(jnp.asarray(p.resid_rate) > 0.5, rate_r, recency_r)
 
 

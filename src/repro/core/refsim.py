@@ -157,6 +157,54 @@ class _RefCache:
                     n_evictions=self.evictions)
 
 
+def simulate_ref_stream(chunks, n_objects: int, sizes, z_mean,
+                        capacity: float, policy_name: str,
+                        params: PolicyParams | None = None,
+                        estimate_z: bool = False,
+                        rebase: bool = False) -> dict:
+    """Streaming oracle: event-driven reference over an *iterable* of
+    ``(times, objs, z_draw)`` chunks, never materializing the full trace.
+
+    Feeding the concatenation in any chunking is identical to
+    :func:`simulate_ref` (the cache is inherently incremental) — this is
+    the parity target for the chunked scan path and the ingestion layer's
+    chunk iterators (DESIGN.md §9).
+
+    ``rebase=True`` mirrors the scan engine's f64 long-trace mode: each
+    chunk's timestamps are rebased to the chunk's first arrival (computed
+    in f64) and the cache's absolute-time state — including the completion
+    heap — is shifted by the same delta, so the oracle stays valid past the
+    f32 absolute-time horizon.
+    """
+    cache = _RefCache(n_objects, capacity, policy_name, params,
+                      np.asarray(z_mean, np.float32), estimate_z)
+    cache.sizes = np.asarray(sizes, np.float32)
+    base = 0.0
+    for times, objs, z_draw in chunks:
+        times = np.asarray(times, np.float64)
+        objs = np.asarray(objs, np.int64)
+        z_draw = np.asarray(z_draw, np.float32)
+        if rebase and len(times):
+            delta = np.float32(float(times[0]) - base)
+            base = float(times[0])
+            o = cache.o
+            for f in ("complete_t", "issue_t", "last_access",
+                      "first_access"):
+                getattr(o, f)[:] = getattr(o, f) - delta
+            # same f32 arithmetic as the shifted complete_t column, so the
+            # heap keys stay consistent with the array they mirror
+            cache.heap = [(float(np.float32(np.float32(t_c) - delta)), j)
+                          for t_c, j in cache.heap]
+            heapq.heapify(cache.heap)
+        local = (times - base).astype(np.float32) if rebase \
+            else times.astype(np.float32)
+        for k in range(len(times)):
+            t = float(local[k])
+            cache.commit_due(t)
+            cache.serve(t, int(objs[k]), z_draw[k])
+    return cache.counters()
+
+
 def simulate_ref(trace: Trace, capacity: float, policy_name: str,
                  params: PolicyParams | None = None,
                  estimate_z: bool = False) -> dict:

@@ -36,10 +36,16 @@ import numpy as np
 from .distributions import Exponential
 from .ranking import (POLICIES, Policy, PolicyParams, lambda_hat,
                       rank_stochastic_vacdh, residual_hat)
-from .state import SimState, init_state, kahan_add, onehot_add, onehot_set
-from .trace import Trace
+from .state import (SimState, init_state, kahan_add, onehot_add, onehot_set,
+                    shift_times)
+from .trace import RequestStream, Trace, stream_of_trace
 
 _EPS = 1e-6
+
+
+def _tree_sel(flag, new, old):
+    """Pytree-wide flag select (works on typed PRNG key leaves)."""
+    return jax.tree.map(lambda a, b: jnp.where(flag, a, b), new, old)
 
 # Scoring backends for the commit-time ranking pass (static per simulation):
 #   'rank'             — the policy's jnp rank function (default)
@@ -350,6 +356,133 @@ def _run_scan(b: _Behavior, trace: Trace, capacity, key,
         step, state, (trace.times, trace.objs.astype(jnp.int32), trace.z_draw))
     return SimResult(state.lat_sum, state.n_hits, state.n_delayed,
                      state.n_misses, state.n_evictions)
+
+
+def _run_chunk(b: _Behavior, params: PolicyParams, estimate_z: bool,
+               state: SimState, sizes: jax.Array, chunk) -> SimState:
+    """Scan one chunk of requests, carrying ``SimState``.
+
+    ``chunk`` is ``(times, objs, z_draw)`` for a full chunk — the step is
+    then *exactly* :func:`_run_scan`'s, so a sequence of chunks is bitwise
+    identical to one scan over the concatenation — or
+    ``(times, objs, z_draw, valid)`` for the padded tail chunk.  Padded
+    steps carry ``valid=False`` and ``t=-inf``: the commit loop's
+    condition ``min_complete <= -inf`` is vacuously false (a bitwise no-op
+    on the state), and the serve's writes are discarded by a tree-wide
+    select.  Only the tail pays for that select — on full chunks the
+    ~state-sized per-step masking would cost ~2x wall-clock (measured,
+    EXPERIMENTS.md §Scale), which is why the fast path exists.
+    """
+    def step(state: SimState, req):
+        t, i, z = req[:3]
+        new = _commit_due(b, params, estimate_z, state, sizes, t)
+        new, _ = _serve(b, params, new, sizes, t, i, z)
+        if len(req) == 4:                  # padded tail: mask invalid steps
+            new = _tree_sel(req[3], new, state)
+        return new, None
+
+    state, _ = jax.lax.scan(step, state, chunk)
+    return state
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("policy_name", "estimate_z",
+                                    "score_mode"),
+                   donate_argnums=(0,))
+def _chunk_step_jit(state: SimState, times, objs, z_draw, valid, delta,
+                    sizes, params: PolicyParams, policy_name: str,
+                    estimate_z: bool, score_mode: str) -> SimState:
+    """One donated-carry chunk dispatch: rebase the carried state's absolute
+    times by ``delta`` (0.0 is a bitwise no-op), then scan the chunk.  The
+    state argument is donated, so the per-object state occupies one set of
+    device buffers for the whole streamed trace.  ``valid`` is ``None``
+    (static: the select-free full-chunk graph) except on a padded tail."""
+    b = _behavior_static(POLICIES[policy_name], params, score_mode, False)
+    state = shift_times(state, delta)
+    chunk = (times, objs, z_draw) if valid is None \
+        else (times, objs, z_draw, valid)
+    return _run_chunk(b, params, estimate_z, state, sizes, chunk)
+
+
+def _result_of_state(state: SimState) -> SimResult:
+    return SimResult(state.lat_sum, state.n_hits, state.n_delayed,
+                     state.n_misses, state.n_evictions)
+
+
+def simulate_stream(stream: RequestStream, capacity: float,
+                    policy: str = "stoch_vacdh",
+                    params: PolicyParams | None = None, key=None,
+                    estimate_z: bool = False, use_kernel=False,
+                    chunk_size: int = 65536,
+                    rebase: bool = True) -> SimResult:
+    """Run one policy over a host-resident stream, one chunk at a time.
+
+    Device residency is O(n_objects + chunk_size) regardless of trace
+    length: each fixed-size chunk is shipped to the device, scanned with
+    the carried (donated) :class:`SimState`, and released.  The tail chunk
+    is padded with ``valid=False`` sentinels so every chunk shares one
+    compiled graph.
+
+    ``rebase=True`` (the long-trace default) re-anchors each chunk to its
+    own start time: the f64 host timestamps are converted to f32 *offsets
+    from the chunk base*, and the carried state's absolute-time fields are
+    shifted by the (f64-computed) base delta at each boundary.  Gap/recency
+    precision is then set by the chunk span instead of total elapsed time —
+    past ~2^24 time units an unrebased f32 clock silently swallows
+    inter-arrival gaps (`tests/test_streaming.py` pins shift invariance).
+    ``rebase=False`` feeds absolute f32 times and is bitwise identical to
+    :func:`simulate` on any trace that fits on device.
+    """
+    if params is None:
+        params = PolicyParams()
+    if key is None:
+        key = jax.random.key(0)
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size={chunk_size} must be >= 1")
+    score_mode = resolve_score_mode(use_kernel)
+    times64 = np.asarray(stream.times, np.float64)
+    objs = np.asarray(stream.objs, np.int32)
+    z_draw = np.asarray(stream.z_draw, np.float32)
+    sizes = jnp.asarray(stream.sizes, jnp.float32)
+    # state.key is donated with the rest of the carry — keep the caller's
+    # key array alive by seeding the state with a copy.
+    state = init_state(stream.n_objects, jnp.float32(capacity),
+                       jnp.asarray(key).copy(),
+                       jnp.asarray(stream.z_mean, jnp.float32))
+
+    base = 0.0
+    n = times64.shape[0]
+    for lo in range(0, max(n, 1), chunk_size):
+        hi = min(lo + chunk_size, n)
+        new_base = float(times64[lo]) if (rebase and hi > lo) else base
+        pad = chunk_size - (hi - lo)
+        t_loc = (times64[lo:hi] - new_base).astype(np.float32)
+        chunk_t = np.concatenate([t_loc, np.full(pad, -np.inf, np.float32)])
+        chunk_i = np.concatenate([objs[lo:hi], np.zeros(pad, np.int32)])
+        chunk_z = np.concatenate([z_draw[lo:hi], np.zeros(pad, np.float32)])
+        valid = None if pad == 0 else jnp.asarray(np.concatenate(
+            [np.ones(hi - lo, bool), np.zeros(pad, bool)]))
+        state = _chunk_step_jit(state, jnp.asarray(chunk_t),
+                                jnp.asarray(chunk_i), jnp.asarray(chunk_z),
+                                valid,
+                                jnp.float32(new_base - base), sizes, params,
+                                policy, estimate_z, score_mode)
+        base = new_base
+    return _result_of_state(state)
+
+
+def simulate_chunked(trace: Trace, capacity: float,
+                     policy: str = "stoch_vacdh",
+                     params: PolicyParams | None = None, key=None,
+                     estimate_z: bool = False, use_kernel=False,
+                     chunk_size: int = 65536) -> SimResult:
+    """Chunked-carry :func:`simulate`: bitwise-identical results, O(chunk)
+    trace residency.  Equivalent to ``simulate_stream(stream_of_trace(t),
+    rebase=False)`` — the f64 widening round-trips every f32 time exactly
+    (tests/test_streaming.py pins bitwise equality across chunk sizes)."""
+    return simulate_stream(stream_of_trace(trace), capacity, policy, params,
+                           key, estimate_z, use_kernel, chunk_size,
+                           rebase=False)
 
 
 def _simulate_impl(trace: Trace, capacity, key, policy_name: str,

@@ -60,20 +60,48 @@ def init_state(n_objects: int, capacity: float, key: jax.Array,
         complete_t=f(INF), issue_t=f(0.0),
         last_access=f(-INF), first_access=f(-INF),
         gap_mean=f(0.0), count=f(0.0),
-        z_est=jnp.asarray(z_prior, jnp.float32),
+        # jnp.array (copy semantics), NOT asarray: z_est must own its buffer
+        # — the streaming engine donates the state, and an aliased caller
+        # array (e.g. trace.z_mean) would be invalidated with it.
+        z_est=jnp.array(z_prior, jnp.float32),
         agg_sum=f(0.0), agg_sq_sum=f(0.0), agg_cnt=f(0.0),
         episode_delay=f(0.0), gd_h=f(0.0),
     )
-    zero = jnp.float32(0.0)
+    # Distinct zero arrays per field: the streaming engine donates the whole
+    # state pytree, and XLA rejects donating one buffer behind two leaves.
+    zero = lambda: jnp.float32(0.0)
     return SimState(
         obj=obj,
         free=jnp.float32(capacity),
-        gd_clock=zero,
+        gd_clock=zero(),
         min_complete=jnp.float32(INF),
         key=key,
-        lat_sum=zero, lat_comp=zero,
-        n_hits=zero, n_delayed=zero, n_misses=zero, n_evictions=zero,
+        lat_sum=zero(), lat_comp=zero(),
+        n_hits=zero(), n_delayed=zero(), n_misses=zero(),
+        n_evictions=zero(),
     )
+
+
+def shift_times(state: SimState, delta) -> SimState:
+    """Rebase every absolute-time field of the state by ``-delta``.
+
+    The streaming engine (DESIGN.md §9) carries absolute time as an f64
+    host-side chunk base plus f32 chunk-local offsets; at a chunk boundary
+    the carried state's time fields move to the new base.  Only *time
+    points* shift — durations (``gap_mean``, ``episode_delay``, latency
+    sums) and the GreedyDual clock are shift-invariant and stay put.  With
+    ``delta == 0.0`` this is a bitwise no-op (``x - 0.0 == x`` for every
+    float, including the ±inf sentinels), which is what keeps the unrebased
+    chunked path bit-identical to the single-scan path.
+    """
+    o = state.obj
+    o = o._replace(
+        complete_t=o.complete_t - delta,
+        issue_t=o.issue_t - delta,
+        last_access=o.last_access - delta,
+        first_access=o.first_access - delta,
+    )
+    return state._replace(obj=o, min_complete=state.min_complete - delta)
 
 
 def kahan_add(total: jax.Array, comp: jax.Array, x: jax.Array):

@@ -35,12 +35,15 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .hierarchy import (HierResult, HierTrace, _hier_impl_named,
                         _hier_multi_impl, check_shards)
 from .ranking import POLICIES, PolicyParams
-from .simulator import (SimResult, _simulate_impl, _simulate_multi_impl,
-                        resolve_score_mode)
+from .simulator import (SimResult, _behavior_multi, _behavior_static,
+                        _result_of_state, _run_chunk, _simulate_impl,
+                        _simulate_multi_impl, resolve_score_mode)
+from .state import init_state
 from .trace import Trace
 
 __all__ = ["SweepGrid", "sweep_grid", "HierSweepGrid", "sweep_hier_grid"]
@@ -89,6 +92,90 @@ def _sweep_multi(tstack, caps, keys, lidx, pstack, policy_names, estimate_z):
 
     inner = jax.vmap(point, in_axes=(None, 0, 0, 0, 0))
     return jax.vmap(lambda tr: inner(tr, caps, keys, lidx, pstack))(tstack)
+
+
+# ---------------------------------------------------------------------------
+# Chunked grid dispatch (DESIGN.md §9): the stacked per-lane SimStates are
+# the carry of a grid-axes x chunk loop — each chunk call advances EVERY
+# lane by one fixed-size trace slice with the state buffers donated, so the
+# request axis never has to be device-resident in one piece.  Per-lane
+# arithmetic is _run_chunk's, i.e. bitwise identical to the unchunked grid
+# (and hence to per-point simulate; tests/test_streaming.py).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("policy_name", "estimate_z",
+                                             "score_mode", "onehot"),
+                   donate_argnums=(0,))
+def _sweep_single_chunk(states, times, objs, z_draw, valid, sizes, pstack,
+                        policy_name, estimate_z, score_mode, onehot):
+    def lane(st, pp, chunk, sz):
+        b = _behavior_static(POLICIES[policy_name], pp, score_mode, onehot)
+        return _run_chunk(b, pp, estimate_z, st, sz, chunk)
+
+    inner = jax.vmap(lane, in_axes=(0, 0, None, None))
+
+    def per_trace(st, t, o, z, sz):
+        chunk = (t, o, z) if valid is None else (t, o, z, valid)
+        return inner(st, pstack, chunk, sz)
+
+    return jax.vmap(per_trace)(states, times, objs, z_draw, sizes)
+
+
+@functools.partial(jax.jit, static_argnames=("policy_names", "estimate_z"),
+                   donate_argnums=(0,))
+def _sweep_multi_chunk(states, times, objs, z_draw, valid, sizes, lidx,
+                       pstack, policy_names, estimate_z):
+    def lane(st, li, pp, chunk, sz):
+        b = _behavior_multi(policy_names, li, pp)
+        return _run_chunk(b, pp, estimate_z, st, sz, chunk)
+
+    inner = jax.vmap(lane, in_axes=(0, 0, 0, None, None))
+
+    def per_trace(st, t, o, z, sz):
+        chunk = (t, o, z) if valid is None else (t, o, z, valid)
+        return inner(st, lidx, pstack, chunk, sz)
+
+    return jax.vmap(per_trace)(states, times, objs, z_draw, sizes)
+
+
+def _run_sweep_chunked(tstack, cflat, kflat, lflat, pflat, single,
+                       policy_names, estimate_z, score_mode, onehot,
+                       chunk_size: int) -> SimResult:
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size={chunk_size} must be >= 1")
+    n_objects = tstack.sizes.shape[1]
+
+    def one(zm, c, k):
+        return init_state(n_objects, c, k, zm)
+
+    states = jax.vmap(lambda zm: jax.vmap(one, in_axes=(None, 0, 0))(
+        zm, cflat, kflat))(tstack.z_mean)
+    # donation safety: the vmapped init may hand back aliased buffers for
+    # identically-zero fields; force every leaf to own its storage.
+    states = jax.tree.map(lambda x: x.copy(), states)
+
+    times = np.asarray(tstack.times, np.float32)
+    objs = np.asarray(tstack.objs, np.int32)
+    z_draw = np.asarray(tstack.z_draw, np.float32)
+    sizes = jnp.asarray(tstack.sizes)
+    n = times.shape[1]
+    for lo in range(0, max(n, 1), chunk_size):
+        hi = min(lo + chunk_size, n)
+        pad = chunk_size - (hi - lo)
+        ext = lambda x, fill, dt: jnp.asarray(np.concatenate(
+            [x[:, lo:hi],
+             np.full((x.shape[0], pad), fill, dt)], axis=1))
+        valid = None if pad == 0 else jnp.asarray(np.concatenate(
+            [np.ones(hi - lo, bool), np.zeros(pad, bool)]))
+        args = (states, ext(times, -np.inf, np.float32),
+                ext(objs, 0, np.int32), ext(z_draw, 0.0, np.float32),
+                valid, sizes)
+        if single:
+            states = _sweep_single_chunk(*args, pflat, policy_names[0],
+                                         estimate_z, score_mode, onehot)
+        else:
+            states = _sweep_multi_chunk(*args, lflat, pflat, policy_names,
+                                        estimate_z)
+    return _result_of_state(states)
 
 
 def _bucket(n: int, bucket) -> int:
@@ -151,7 +238,8 @@ def _flatten_lanes(policy_names, params_list, cap_arrays, seeds,
 def sweep_grid(traces, capacities, policies,
                params=PolicyParams(), seeds=(0,),
                estimate_z: bool = False, use_kernel=False,
-               lane_bucket: int | None = None) -> SweepGrid:
+               lane_bucket: int | None = None,
+               chunk_size: int | None = None) -> SweepGrid:
     """Run the full scenario grid in one compiled call.
 
     traces      — one :class:`Trace` or a sequence of identically-shaped
@@ -166,6 +254,12 @@ def sweep_grid(traces, capacities, policies,
     lane_bucket — pad the flattened grid up to this many lanes (repeats of
                   lane 0, sliced off afterwards) so sweeps of different
                   sizes share one compiled graph.
+    chunk_size  — when set, run the grid as a grid-axes x chunk loop: each
+                  compiled dispatch advances every lane by one fixed-size
+                  trace chunk with the stacked per-lane states donated, so
+                  the request axis is device-resident one chunk at a time
+                  (DESIGN.md §9).  Results are bitwise identical to the
+                  unchunked grid.
 
     Returns a :class:`SweepGrid`; ``result`` fields are
     ``[T, L, P, C, S]``-shaped.  Each point is bitwise identical to the
@@ -181,16 +275,21 @@ def sweep_grid(traces, capacities, policies,
     lflat, pflat, (cflat,), kflat, G = _flatten_lanes(
         policy_names, params_list, [caps], seeds, lane_bucket)
 
-    if single:
+    if not single and resolve_score_mode(use_kernel) != "rank":
+        raise ValueError("use_kernel is only supported for single-policy "
+                         "sweeps (the kernel specializes eq. 16)")
+    if chunk_size is not None:
+        res = _run_sweep_chunked(tstack, cflat, kflat, lflat, pflat, single,
+                                 policy_names, estimate_z,
+                                 resolve_score_mode(use_kernel),
+                                 cflat.shape[0] > 1, chunk_size)
+    elif single:
         # one-hot state updates only when the grid is actually batched —
         # unbatched scatters are cheaper at large N (DESIGN.md §7)
         res = _sweep_single(tstack, cflat, kflat, pflat, policy_names[0],
                             estimate_z, resolve_score_mode(use_kernel),
                             cflat.shape[0] > 1)
     else:
-        if resolve_score_mode(use_kernel) != "rank":
-            raise ValueError("use_kernel is only supported for single-policy "
-                             "sweeps (the kernel specializes eq. 16)")
         res = _sweep_multi(tstack, cflat, kflat, lflat, pflat, policy_names,
                            estimate_z)
     res = SimResult(*(x[:, :G].reshape((len(trace_list), L, P, C, S))

@@ -67,3 +67,64 @@ def make_trace(times, objs, sizes, z_mean, key=None, stochastic=True,
 
 def to_numpy(trace: Trace) -> "Trace":
     return Trace(*(np.asarray(x) for x in trace))
+
+
+# ---------------------------------------------------------------------------
+# Streaming schema: host-resident request streams for traces too large to
+# materialize on device in one piece (DESIGN.md §9).
+# ---------------------------------------------------------------------------
+class RequestStream(NamedTuple):
+    """A host-side request stream over a (compacted) object universe.
+
+    The device :class:`Trace` stores times in f32, which silently loses
+    inter-arrival gaps once absolute time exceeds ~2^24 time units; a
+    stream keeps **f64 times on the host** and hands the simulator f32
+    *chunk-local offsets* (each chunk rebased to its own start), so
+    precision is set by the chunk span, not the trace span.  All other
+    per-request/per-object columns match the :class:`Trace` schema; the
+    pre-drawn ``z_draw`` keeps streaming runs bit-reproducible against the
+    event-driven oracle exactly like device traces.
+
+    times   f64[T] — non-decreasing absolute request times (host numpy)
+    objs    i32[T] — dense object id per request (see data/traces.py
+                     compaction for how raw keys become dense ids)
+    sizes   f32[N] — object sizes
+    z_mean  f32[N] — mean origin fetch latency per object
+    z_draw  f32[T] — realized fetch duration if request k misses
+    """
+
+    times: np.ndarray
+    objs: np.ndarray
+    sizes: np.ndarray
+    z_mean: np.ndarray
+    z_draw: np.ndarray
+
+    @property
+    def n_requests(self) -> int:
+        return self.times.shape[0]
+
+    @property
+    def n_objects(self) -> int:
+        return self.sizes.shape[0]
+
+
+def stream_of_trace(trace: Trace) -> RequestStream:
+    """View a device :class:`Trace` as a host stream (times widened to f64)."""
+    return RequestStream(
+        times=np.asarray(trace.times, np.float64),
+        objs=np.asarray(trace.objs, np.int32),
+        sizes=np.asarray(trace.sizes, np.float32),
+        z_mean=np.asarray(trace.z_mean, np.float32),
+        z_draw=np.asarray(trace.z_draw, np.float32))
+
+
+def trace_of_stream(stream: RequestStream) -> Trace:
+    """Materialize a stream as a device :class:`Trace` (times narrowed to
+    f32 — exact only while absolute times stay within f32 precision; the
+    parity tests run both paths on such traces)."""
+    return Trace(
+        times=jnp.asarray(stream.times.astype(np.float32)),
+        objs=jnp.asarray(stream.objs, jnp.int32),
+        sizes=jnp.asarray(stream.sizes, jnp.float32),
+        z_mean=jnp.asarray(stream.z_mean, jnp.float32),
+        z_draw=jnp.asarray(stream.z_draw, jnp.float32))

@@ -1,5 +1,6 @@
-"""Trace generators: paper §5.2 synthetic workloads + §5.3 surrogate traces.
+"""Trace generators and real-world trace ingestion.
 
+Generators: paper §5.2 synthetic workloads + §5.3 surrogate traces.
 Synthetic (§5.2): 100k requests over 100 objects, Zipf popularity, sizes
 uniform [1, 100] MB, miss latency = L + c * size, arrivals Poisson or Pareto.
 
@@ -9,6 +10,17 @@ calibrated to the published shape characteristics in the paper's Fig. 3
 (popularity skew, inter-arrival scale/burstiness, object-size regime).  Real
 traces can be dropped in by constructing a :class:`repro.core.trace.Trace`
 from (times, objs, sizes) directly — the schema is the integration point.
+
+Ingestion (DESIGN.md §9): :func:`load_trace_csv` reads CDN/wiki-style
+``timestamp,key,size`` CSVs, :func:`save_trace_bin`/:func:`load_trace_bin`
+a packed binary format, both into a host-side :class:`RawTrace` (f64 times,
+64-bit hashed keys).  :func:`compact_requests` hashes raw keys onto a dense
+object universe — top-K hot keys get dedicated ids, the cold tail shares a
+recycled-id pool — producing a :class:`repro.core.trace.RequestStream` the
+chunked simulator replays without ever materializing the trace on device.
+:func:`realworld_raw` generates a ≥1M-request realistic trace (Zipf + a
+diurnal rate cycle + lognormal sizes, epoch-scale timestamps) standing in
+for the paper's §5 real traces.
 """
 from __future__ import annotations
 
@@ -16,12 +28,17 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.distributions import MissLatency, make_distribution
-from repro.core.trace import Trace, make_trace
+from repro.core.distributions import (Exponential, MissLatency,
+                                      make_distribution)
+from repro.core.trace import RequestStream, Trace, make_trace
 
 __all__ = ["SyntheticSpec", "zipf_probs", "synthetic_trace",
-           "surrogate_trace", "SURROGATES"]
+           "surrogate_trace", "SURROGATES",
+           "RawTrace", "CompactionStats", "RealWorldSpec",
+           "load_trace_csv", "save_trace_bin", "load_trace_bin",
+           "compact_requests", "realworld_raw"]
 
 
 def zipf_probs(n: int, alpha: float) -> jax.Array:
@@ -114,3 +131,281 @@ def surrogate_trace(name: str, key: jax.Array | None = None,
     if key is None:
         key = jax.random.key(hash(name) % (2**31))
     return synthetic_trace(key, spec)
+
+
+# ===========================================================================
+# Real-world trace ingestion (DESIGN.md §9)
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class RawTrace:
+    """Per-request columns straight off a trace file (host numpy).
+
+    times  f64[T] — absolute request timestamps (seconds; f64 so epoch-scale
+                    clocks keep sub-ms inter-arrival gaps — an f32 clock
+                    swallows them past ~2^24 s)
+    keys   u64[T] — raw object keys (numeric ids verbatim, strings hashed
+                    with FNV-1a; see :func:`key_u64`)
+    sizes  f32[T] — object size as reported per request
+    """
+
+    times: np.ndarray
+    keys: np.ndarray
+    sizes: np.ndarray
+
+    @property
+    def n_requests(self) -> int:
+        return self.times.shape[0]
+
+    def sorted(self) -> "RawTrace":
+        """Time-ordered copy (stable, so equal timestamps keep file order);
+        returns self when already non-decreasing."""
+        if self.times.shape[0] < 2 or bool(
+                np.all(np.diff(self.times) >= 0.0)):
+            return self
+        order = np.argsort(self.times, kind="stable")
+        return RawTrace(self.times[order], self.keys[order],
+                        self.sizes[order])
+
+
+_FNV_OFFSET = 0xcbf29ce484222325
+_FNV_PRIME = 0x100000001b3
+_U64 = 0xFFFFFFFFFFFFFFFF
+
+
+def key_u64(key: str) -> int:
+    """Stable 64-bit key: decimal ids pass through verbatim, anything else
+    is FNV-1a-hashed — deterministic across runs and machines (unlike
+    Python's salted ``hash``).  ``isdecimal`` (not ``isdigit``) guards the
+    int() path: isdigit also accepts Unicode digits like superscripts that
+    int() rejects, which would abort a million-row ingest on one odd key."""
+    key = key.strip()
+    if key.isdecimal():
+        return int(key) & _U64
+    h = _FNV_OFFSET
+    for b in key.encode("utf-8"):
+        h = ((h ^ b) * _FNV_PRIME) & _U64
+    return h
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer: decorrelates raw key values from
+    their recycled-pool slot (sequential ids would otherwise collide in
+    runs)."""
+    x = np.asarray(x, np.uint64).copy()
+    x += np.uint64(0x9E3779B97F4A7C15)
+    x ^= x >> np.uint64(30)
+    x *= np.uint64(0xBF58476D1CE4E5B9)
+    x ^= x >> np.uint64(27)
+    x *= np.uint64(0x94D049BB133111EB)
+    x ^= x >> np.uint64(31)
+    return x
+
+
+def load_trace_csv(path, *, time_col: int = 0, key_col: int = 1,
+                   size_col: int = 2, delimiter: str = ",") -> RawTrace:
+    """Read a CDN/wiki-style ``timestamp,key,size`` CSV into a RawTrace.
+
+    Lines whose time field does not parse as a float (headers, comments,
+    blanks) are skipped; rows are stable-sorted by time if the file is not
+    already ordered.  Column positions and the delimiter are configurable
+    for the common variants (space-separated, reordered columns)."""
+    times, keys, sizes = [], [], []
+    with open(path) as f:
+        for line in f:
+            parts = line.strip().split(delimiter)
+            if len(parts) <= max(time_col, key_col, size_col):
+                continue
+            try:
+                t = float(parts[time_col])
+                s = float(parts[size_col])
+            except ValueError:
+                continue        # header / comment row
+            times.append(t)
+            keys.append(key_u64(parts[key_col]))
+            sizes.append(s)
+    return RawTrace(np.asarray(times, np.float64),
+                    np.asarray(keys, np.uint64),
+                    np.asarray(sizes, np.float32)).sorted()
+
+
+_BIN_MAGIC = b"DHCT"
+_BIN_VERSION = 1
+_BIN_DTYPE = np.dtype([("time", "<f8"), ("key", "<u8"), ("size", "<f4")])
+
+
+def save_trace_bin(path, raw: RawTrace) -> None:
+    """Write the packed binary trace format: an 16-byte header (magic,
+    version, record count) followed by little-endian ``(f64 time, u64 key,
+    f32 size)`` records — 20 bytes/request, ~3x smaller than typical CSV
+    and loadable without parsing."""
+    rec = np.empty(raw.n_requests, _BIN_DTYPE)
+    rec["time"] = raw.times
+    rec["key"] = raw.keys
+    rec["size"] = raw.sizes
+    with open(path, "wb") as f:
+        f.write(_BIN_MAGIC)
+        f.write(np.uint32(_BIN_VERSION).tobytes())
+        f.write(np.uint64(raw.n_requests).tobytes())
+        rec.tofile(f)
+
+
+def load_trace_bin(path) -> RawTrace:
+    """Read the packed binary format written by :func:`save_trace_bin`."""
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        if magic != _BIN_MAGIC:
+            raise ValueError(f"{path}: not a packed trace "
+                             f"(magic {magic!r} != {_BIN_MAGIC!r})")
+        version = int(np.frombuffer(f.read(4), np.uint32)[0])
+        if version != _BIN_VERSION:
+            raise ValueError(f"{path}: unsupported trace version {version}")
+        n = int(np.frombuffer(f.read(8), np.uint64)[0])
+        rec = np.fromfile(f, _BIN_DTYPE, count=n)
+    if rec.shape[0] != n:
+        raise ValueError(f"{path}: truncated — header promises {n} records, "
+                         f"file holds {rec.shape[0]}")
+    return RawTrace(rec["time"].astype(np.float64),
+                    rec["key"].astype(np.uint64),
+                    rec["size"].astype(np.float32)).sorted()
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionStats:
+    """What :func:`compact_requests` did to the key universe.
+
+    The **accuracy contract** (DESIGN.md §9): when ``n_unique <= top_k``
+    the mapping is injective (every key gets its own dense id) and the
+    compacted replay is *exactly* the uncompacted one.  Otherwise only the
+    cold tail is approximated: tail keys share ``n_recycle`` pooled ids,
+    so aliased keys pool their statistics and cache occupancy.  Hot-key
+    ids, sizes, and request order are always preserved, and the share of
+    requests that can be affected at all is bounded by ``tail_mass``
+    (the tail's request fraction — benchmarks/fig_realworld.py measures
+    the realized sensitivity).
+    """
+
+    n_unique: int           # distinct raw keys in the trace
+    n_hot: int              # keys given dedicated dense ids (<= top_k)
+    n_recycle: int          # size of the shared cold-tail id pool
+    n_objects: int          # dense universe size the stream uses
+    tail_unique: int        # distinct keys sharing the recycled pool
+    tail_mass: float        # fraction of requests hitting the tail
+
+
+def compact_requests(raw: RawTrace, *, top_k: int = 4096,
+                     n_recycle: int = 512,
+                     latency_base: float = 0.005,
+                     latency_per_mb: float = 2e-4,
+                     dist: MissLatency | None = None,
+                     seed: int = 0) -> tuple[RequestStream, CompactionStats]:
+    """Map raw 64-bit keys onto a dense object universe and build a stream.
+
+    The ``top_k`` most-requested keys get dedicated ids ``0..K-1``
+    (frequency order, ties broken by key value for determinism); every
+    colder key is hashed into a recycled pool of ``n_recycle`` shared ids.
+    Per-object size is the first-seen request size for the id; the fetch
+    latency model is the paper's ``L + c*size`` with realized durations
+    pre-drawn from ``dist`` (Exponential by default) so replays are
+    bit-reproducible.  See :class:`CompactionStats` for the accuracy
+    contract vs the uncompacted run."""
+    if top_k < 1 or n_recycle < 0:
+        raise ValueError(f"top_k={top_k} must be >= 1, n_recycle="
+                         f"{n_recycle} >= 0")
+    raw = raw.sorted()
+    uniq, inv, counts = np.unique(raw.keys, return_inverse=True,
+                                  return_counts=True)
+    n_unique = uniq.shape[0]
+    # frequency rank, deterministic: sort by (-count, key value)
+    order = np.lexsort((uniq, -counts))
+    rank = np.empty(n_unique, np.int64)
+    rank[order] = np.arange(n_unique)
+    n_hot = min(top_k, n_unique)
+    hot = rank < top_k
+    if n_unique <= top_k:
+        ids_of_uniq = rank                      # injective: exact replay
+        n_objects = n_unique
+        tail_unique, tail_mass = 0, 0.0
+    else:
+        if n_recycle < 1:
+            raise ValueError(
+                f"trace has {n_unique} unique keys > top_k={top_k}; "
+                f"n_recycle must be >= 1 to pool the tail")
+        pool = top_k + (_mix64(uniq) % np.uint64(n_recycle)).astype(np.int64)
+        ids_of_uniq = np.where(hot, rank, pool)
+        n_objects = top_k + n_recycle
+        tail_unique = int(n_unique - n_hot)
+        tail_mass = float(counts[~hot].sum()) / float(raw.n_requests)
+    objs = ids_of_uniq[inv].astype(np.int32)
+
+    # per-object size: first-seen request size (never-hit pool slots get 1.0)
+    first = np.full(n_objects, raw.n_requests, np.int64)
+    np.minimum.at(first, objs, np.arange(raw.n_requests))
+    sizes_obj = np.ones(n_objects, np.float32)
+    seen = first < raw.n_requests
+    sizes_obj[seen] = raw.sizes[first[seen]]
+
+    z_mean = (latency_base + latency_per_mb * sizes_obj).astype(np.float32)
+    unit = np.asarray((dist or Exponential()).sample_unit(
+        jax.random.key(seed), (raw.n_requests,)), np.float32)
+    z_draw = z_mean[objs] * unit
+    stream = RequestStream(times=raw.times.astype(np.float64), objs=objs,
+                           sizes=sizes_obj, z_mean=z_mean, z_draw=z_draw)
+    return stream, CompactionStats(
+        n_unique=int(n_unique), n_hot=int(n_hot), n_recycle=int(n_recycle),
+        n_objects=int(n_objects), tail_unique=tail_unique,
+        tail_mass=tail_mass)
+
+
+# ---------------------------------------------------------------------------
+# Generated-realistic long trace: the stand-in for the paper's §5 real
+# traces at the scale the streaming engine targets (the container has no
+# network access; see the surrogate note at the top of this module).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RealWorldSpec:
+    """A ≥1M-request CDN-like workload: Zipf popularity over a large key
+    space, a sinusoidal diurnal rate cycle, lognormal object sizes, and
+    epoch-scale f64 timestamps (which is what makes the f32 clock of the
+    in-memory :class:`Trace` unusable and the rebased streaming path
+    necessary — DESIGN.md §9)."""
+
+    n_requests: int = 1_000_000
+    n_keys: int = 200_000
+    zipf_alpha: float = 0.9
+    rate: float = 2000.0            # mean request rate (req/s)
+    diurnal_amplitude: float = 0.6  # peak-to-mean rate modulation in [0, 1)
+    diurnal_period: float = 86400.0
+    size_log_mu: float = 0.0        # lognormal object sizes (ln MB)
+    size_log_sigma: float = 1.2
+    size_max: float = 512.0
+    start_time: float = 1.7e9       # epoch-like origin (seconds)
+    seed: int = 0
+
+
+def realworld_raw(spec: RealWorldSpec = RealWorldSpec()) -> RawTrace:
+    """Generate the realistic long trace as raw per-request columns.
+
+    Pure numpy (the request axis never touches the device): Zipf-ranked
+    keys are scrambled through splitmix64 so raw key values look like
+    hashed URLs; inter-arrival gaps are exponential with the diurnal rate
+    modulation applied; times accumulate in f64."""
+    if not 0.0 <= spec.diurnal_amplitude < 1.0:
+        raise ValueError("diurnal_amplitude must be in [0, 1)")
+    rng = np.random.default_rng(spec.seed)
+    probs = np.arange(1, spec.n_keys + 1, dtype=np.float64) ** -spec.zipf_alpha
+    probs /= probs.sum()
+    ranks = rng.choice(spec.n_keys, size=spec.n_requests, p=probs)
+
+    gaps = rng.exponential(1.0 / spec.rate, spec.n_requests)
+    # diurnal thinning: slow the clock where the rate is low (evaluated at
+    # the unmodulated cumulative time — a standard first-order approx)
+    t_approx = np.cumsum(gaps)
+    factor = 1.0 + spec.diurnal_amplitude * np.sin(
+        2.0 * np.pi * t_approx / spec.diurnal_period)
+    times = spec.start_time + np.cumsum(gaps / factor, dtype=np.float64)
+
+    sizes_key = np.minimum(
+        rng.lognormal(spec.size_log_mu, spec.size_log_sigma, spec.n_keys),
+        spec.size_max).astype(np.float32)
+    keys = _mix64(np.arange(spec.n_keys, dtype=np.uint64))
+    return RawTrace(times, keys[ranks], sizes_key[ranks])

@@ -1,0 +1,328 @@
+"""The streaming chunked engine (DESIGN.md §9) and the ingestion layer.
+
+Contracts under test:
+
+* chunked/streaming ``simulate`` / ``simulate_hier`` / ``sweep_grid`` are
+  **bitwise identical** to the single-scan paths on any trace both can run;
+* the rebased f64 streaming path is **shift-invariant bit-for-bit**: a
+  late-trace window equals an early-trace window after a time shift (the
+  f32 device path demonstrably is not, past the ~2^24 horizon);
+* the streaming event-driven oracle equals the monolithic oracle under any
+  chunking, and the ingestion/compaction pipeline honors its accuracy
+  contract (injective == exact).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (PolicyParams, RequestStream, Trace, make_hier_trace,
+                        simulate, simulate_chunked, simulate_hier,
+                        simulate_hier_chunked, simulate_stream, sweep_grid)
+from repro.core.refsim import simulate_ref, simulate_ref_stream
+from repro.core.trace import stream_of_trace, trace_of_stream
+from repro.data.traces import (RawTrace, RealWorldSpec, SyntheticSpec,
+                               compact_requests, key_u64, load_trace_csv,
+                               load_trace_bin, realworld_raw, save_trace_bin,
+                               synthetic_trace)
+
+
+def _trace(seed=0, n_requests=1500, n_objects=40):
+    spec = SyntheticSpec(n_objects=n_objects, n_requests=n_requests,
+                         rate=300.0, size_min=1.0, size_max=20.0,
+                         latency_base=0.01, latency_per_mb=1e-3)
+    return synthetic_trace(jax.random.key(seed), spec)
+
+
+def _assert_same_result(a, b):
+    for fa, fb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+# ---------------------------------------------------------------------------
+# chunked == single-scan, bitwise
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("chunk_size", [1, 7, 1500])
+def test_chunked_simulate_bitwise_matches_single_scan(chunk_size):
+    trace = _trace()
+    base = simulate(trace, 100.0, "stoch_vacdh", estimate_z=True)
+    got = simulate_chunked(trace, 100.0, "stoch_vacdh", estimate_z=True,
+                           chunk_size=chunk_size)
+    _assert_same_result(base, got)
+
+
+def test_chunked_simulate_matches_across_policies():
+    trace = _trace(seed=3)
+    for policy in ("lru", "lru_mad", "adaptsize", "vacdh"):
+        base = simulate(trace, 80.0, policy)
+        got = simulate_chunked(trace, 80.0, policy, chunk_size=256)
+        _assert_same_result(base, got)
+
+
+@pytest.mark.parametrize("chunk_size", [7, 900, 2500])
+def test_chunked_hierarchy_bitwise_matches_single_scan(chunk_size):
+    ht = make_hier_trace(_trace(n_requests=2500), 3, hop_mean=0.004,
+                         route="random", key=jax.random.key(5))
+    base = simulate_hier(ht, 3, 20.0, 90.0, "stoch_vacdh")
+    got = simulate_hier_chunked(ht, 3, 20.0, 90.0, "stoch_vacdh",
+                                chunk_size=chunk_size)
+    _assert_same_result(base.per_shard, got.per_shard)
+    _assert_same_result(base.l2, got.l2)
+
+
+def test_chunked_sweep_bitwise_matches_unchunked():
+    traces = [_trace(seed=s, n_requests=2000) for s in (0, 1)]
+    params = [PolicyParams(omega=o) for o in (0.0, 1.0)]
+    kw = dict(params=params, seeds=(0,), estimate_z=True)
+    g0 = sweep_grid(traces, [60.0, 150.0], "stoch_vacdh", **kw)
+    g1 = sweep_grid(traces, [60.0, 150.0], "stoch_vacdh", chunk_size=700,
+                    **kw)
+    _assert_same_result(g0.result, g1.result)
+
+
+def test_chunked_sweep_multi_policy_bitwise_matches_unchunked():
+    trace = _trace(seed=2, n_requests=2000)
+    names = ["lru", "stoch_vacdh", "lru_mad", "adaptsize"]
+    g0 = sweep_grid(trace, 100.0, names, [PolicyParams()], seeds=(0, 2))
+    g1 = sweep_grid(trace, 100.0, names, [PolicyParams()], seeds=(0, 2),
+                    chunk_size=999)
+    _assert_same_result(g0.result, g1.result)
+
+
+def test_stream_unrebased_bitwise_matches_simulate():
+    trace = _trace()
+    base = simulate(trace, 100.0, "stoch_vacdh")
+    got = simulate_stream(stream_of_trace(trace), 100.0, "stoch_vacdh",
+                          chunk_size=256, rebase=False)
+    _assert_same_result(base, got)
+
+
+# ---------------------------------------------------------------------------
+# f64 time carries: shift invariance of the rebased path (the f32-drift fix)
+# ---------------------------------------------------------------------------
+def _gap_pattern_stream(base_time: float, seed=3, T=4000, N=50):
+    """A stream with exactly-representable gaps placed at ``base_time``."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.integers(1, 2000, T) * 2.0 ** -10
+    objs = rng.integers(0, N, T).astype(np.int32)
+    sizes = rng.integers(1, 8, N).astype(np.float32)
+    z_mean = np.full(N, 0.05, np.float32)
+    z_draw = (z_mean[objs] * rng.exponential(1.0, T)).astype(np.float32)
+    return RequestStream(base_time + np.cumsum(gaps), objs, sizes, z_mean,
+                         z_draw)
+
+
+def test_rebased_stream_is_shift_invariant_bit_for_bit():
+    """The satellite fix: a late-trace window must equal an early-trace
+    window bit-for-bit after a time shift.  3*2^25 ≈ 1e8 seconds is far
+    past the f32 horizon where sub-ms gaps vanish."""
+    early = _gap_pattern_stream(0.0)
+    late = _gap_pattern_stream(3 * 2.0 ** 25)
+    a = simulate_stream(early, 40.0, "stoch_vacdh", chunk_size=512)
+    b = simulate_stream(late, 40.0, "stoch_vacdh", chunk_size=512)
+    _assert_same_result(a, b)
+
+
+def test_f32_device_path_corrupts_at_late_base_rebased_does_not():
+    """Documents WHY the rebased path exists: the same workload shifted to
+    an epoch-scale base produces different outcome counts through the f32
+    device trace (gaps below the f32 ulp collapse), while the rebased
+    stream reproduces the early-window counts exactly."""
+    early = _gap_pattern_stream(0.0)
+    late = _gap_pattern_stream(3 * 2.0 ** 25)
+    want = simulate_stream(early, 40.0, "stoch_vacdh", chunk_size=512)
+    f32 = simulate(trace_of_stream(late), 40.0, "stoch_vacdh")
+    assert int(f32.n_hits) != int(want.n_hits)   # the drift is real
+    got = simulate_stream(late, 40.0, "stoch_vacdh", chunk_size=512)
+    assert int(got.n_hits) == int(want.n_hits)
+
+
+# ---------------------------------------------------------------------------
+# streaming event-driven oracle
+# ---------------------------------------------------------------------------
+def test_ref_stream_chunking_is_transparent():
+    trace = _trace(seed=7, n_requests=800)
+    whole = simulate_ref(trace, 90.0, "stoch_vacdh")
+    t = np.asarray(trace.times)
+    o = np.asarray(trace.objs)
+    z = np.asarray(trace.z_draw)
+    cuts = [0, 13, 101, 400, 800]
+    chunks = [(t[a:b], o[a:b], z[a:b]) for a, b in zip(cuts, cuts[1:])]
+    got = simulate_ref_stream(chunks, trace.n_objects, trace.sizes,
+                              trace.z_mean, 90.0, "stoch_vacdh")
+    assert got == whole
+
+
+def test_scan_stream_matches_ref_stream_rebased():
+    """Chunked scan with rebasing vs the rebased streaming oracle on a
+    trace with exactly-representable times: same counters."""
+    stream = _gap_pattern_stream(2.0 ** 26, T=1200, N=24)
+    scan = simulate_stream(stream, 30.0, "lru", chunk_size=256)
+    cuts = list(range(0, 1200 + 1, 256))
+    chunks = [(stream.times[a:b], stream.objs[a:b], stream.z_draw[a:b])
+              for a, b in zip(cuts, cuts[1:] + [1200])]
+    ref = simulate_ref_stream(chunks, stream.n_objects, stream.sizes,
+                              stream.z_mean, 30.0, "lru", rebase=True)
+    assert int(scan.n_hits) == ref["n_hits"]
+    assert int(scan.n_delayed) == ref["n_delayed"]
+    assert int(scan.n_misses) == ref["n_misses"]
+    assert int(scan.n_evictions) == ref["n_evictions"]
+    np.testing.assert_allclose(float(scan.total_latency),
+                               ref["total_latency"], rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ingestion: formats, hashing, compaction contract
+# ---------------------------------------------------------------------------
+def test_bin_format_roundtrip(tmp_path):
+    raw = realworld_raw(RealWorldSpec(n_requests=5000, n_keys=2000))
+    path = tmp_path / "trace.bin"
+    save_trace_bin(path, raw)
+    back = load_trace_bin(path)
+    np.testing.assert_array_equal(raw.times, back.times)
+    np.testing.assert_array_equal(raw.keys, back.keys)
+    np.testing.assert_array_equal(raw.sizes, back.sizes)
+
+
+def test_bin_format_rejects_garbage(tmp_path):
+    path = tmp_path / "bad.bin"
+    path.write_bytes(b"not a trace at all")
+    with pytest.raises(ValueError, match="magic"):
+        load_trace_bin(path)
+
+
+def test_key_hashing_unicode_digits_do_not_crash():
+    """str.isdigit() accepts Unicode digits (superscripts etc.) that int()
+    rejects; the key router must hash those instead of aborting the
+    ingest."""
+    assert key_u64("123") == 123
+    assert key_u64(" 42 ") == 42
+    for odd in ("²", "x²", "½"):       # ², x², ½
+        h = key_u64(odd)
+        assert isinstance(h, int) and 0 <= h < 2 ** 64
+    assert key_u64("²") != key_u64("½")
+
+
+def test_csv_ingestion_with_header_and_string_keys(tmp_path):
+    path = tmp_path / "trace.csv"
+    path.write_text(
+        "timestamp,key,size\n"
+        "100.5,/wiki/Main_Page,0.25\n"
+        "100.5,/wiki/Main_Page,0.25\n"
+        "101.0,12345,1.5\n"
+        "\n"
+        "99.0,/wiki/Other,2.0\n")     # out of order -> sorted
+    raw = load_trace_csv(path)
+    assert raw.n_requests == 4
+    assert list(raw.times) == [99.0, 100.5, 100.5, 101.0]
+    assert raw.keys[1] == raw.keys[2] == key_u64("/wiki/Main_Page")
+    assert raw.keys[3] == 12345          # numeric ids pass through
+    assert raw.keys[0] == key_u64("/wiki/Other")
+
+
+def test_compaction_injective_when_universe_fits():
+    raw = realworld_raw(RealWorldSpec(n_requests=20_000, n_keys=3000))
+    stream, stats = compact_requests(raw, top_k=10_000, n_recycle=64)
+    assert stats.n_objects == stats.n_unique    # one id per key, no pool
+    assert stats.tail_mass == 0.0
+    # ids are a bijection onto 0..n_unique-1
+    assert len(np.unique(stream.objs)) == stats.n_unique
+
+
+def test_compaction_tail_pooling_and_stats():
+    raw = realworld_raw(RealWorldSpec(n_requests=20_000, n_keys=3000))
+    stream, stats = compact_requests(raw, top_k=500, n_recycle=32)
+    assert stats.n_objects == 500 + 32
+    assert stream.objs.max() < stats.n_objects
+    assert stats.tail_unique == stats.n_unique - 500
+    # hot ids are frequency-ordered: id 0 is the most-requested key
+    counts = np.bincount(stream.objs, minlength=stats.n_objects)
+    assert counts[0] == counts[:500].max()
+    assert 0.0 < stats.tail_mass < 1.0
+    # the tail share really is the pooled request mass
+    np.testing.assert_allclose(counts[500:].sum() / stream.n_requests,
+                               stats.tail_mass, rtol=1e-6)
+
+
+def test_compaction_rejects_overflow_without_pool():
+    raw = realworld_raw(RealWorldSpec(n_requests=5000, n_keys=2000))
+    with pytest.raises(ValueError, match="n_recycle"):
+        compact_requests(raw, top_k=10, n_recycle=0)
+
+
+def test_compacted_stream_replays_end_to_end():
+    """Ingestion -> compaction -> chunked replay, with conservation checks
+    and oracle parity on the compacted universe."""
+    raw = realworld_raw(RealWorldSpec(n_requests=3000, n_keys=800,
+                                      start_time=1.7e9))
+    stream, stats = compact_requests(raw, top_k=200, n_recycle=16)
+    r = simulate_stream(stream, 50.0, "stoch_vacdh", chunk_size=512)
+    assert int(r.n_hits) + int(r.n_delayed) + int(r.n_misses) == 3000
+    assert float(r.total_latency) > 0.0
+    chunks = [(stream.times[a:a + 512], stream.objs[a:a + 512],
+               stream.z_draw[a:a + 512]) for a in range(0, 3000, 512)]
+    ref = simulate_ref_stream(chunks, stream.n_objects, stream.sizes,
+                              stream.z_mean, 50.0, "stoch_vacdh",
+                              rebase=True)
+    assert int(r.n_hits) == ref["n_hits"]
+    assert int(r.n_misses) == ref["n_misses"]
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: chunk-size transparency as a property
+# ---------------------------------------------------------------------------
+def test_chunking_property_based():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def chunk_case(draw):
+        n_obj = draw(st.integers(2, 12))
+        n_req = draw(st.integers(20, 120))
+        seed = draw(st.integers(0, 2 ** 16))
+        key = jax.random.key(seed)
+        k1, k2, k3 = jax.random.split(key, 3)
+        times = jnp.cumsum(jax.random.exponential(k1, (n_req,)) * 0.01)
+        objs = jax.random.randint(k2, (n_req,), 0, n_obj)
+        sizes = jax.random.uniform(k3, (n_obj,), minval=1.0, maxval=5.0)
+        z_mean = jnp.full((n_obj,), 0.05)
+        z_draw = z_mean[objs] * jax.random.exponential(k3, (n_req,))
+        trace = Trace(times, objs.astype(jnp.int32), sizes, z_mean, z_draw)
+        policy = draw(st.sampled_from(["lru", "stoch_vacdh", "lru_mad"]))
+        cap = draw(st.floats(2.0, 30.0))
+        return trace, n_req, policy, cap
+
+    @given(case=chunk_case())
+    @settings(deadline=None, max_examples=10)
+    def prop(case):
+        trace, n_req, policy, cap = case
+        base = simulate(trace, cap, policy)
+        for chunk_size in (1, 7, n_req):
+            got = simulate_chunked(trace, cap, policy,
+                                   chunk_size=chunk_size)
+            _assert_same_result(base, got)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# long-trace smoke (CI's dedicated job; excluded from tier-1 via -m marker)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_long_trace_streaming_smoke():
+    """≥100k requests through ingestion + compaction + the chunked engine:
+    the unrebased stream must equal the device single-scan bitwise, and the
+    rebased epoch-base replay must conserve requests."""
+    raw = realworld_raw(RealWorldSpec(n_requests=100_000, n_keys=20_000,
+                                      start_time=1.7e9))
+    stream, stats = compact_requests(raw, top_k=2000, n_recycle=128)
+    assert stats.n_objects == 2128
+    r = simulate_stream(stream, 500.0, "stoch_vacdh", chunk_size=16384)
+    assert int(r.n_hits) + int(r.n_delayed) + int(r.n_misses) == 100_000
+
+    # bitwise parity vs the single-scan device path on an early-base copy
+    early = stream._replace(times=stream.times - stream.times[0])
+    a = simulate_stream(early, 500.0, "stoch_vacdh", chunk_size=16384,
+                        rebase=False)
+    b = simulate(trace_of_stream(early), 500.0, "stoch_vacdh")
+    _assert_same_result(a, b)
