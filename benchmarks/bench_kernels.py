@@ -16,12 +16,20 @@ from .common import emit
 
 
 def _time(fn, *args, iters=5):
+    """(mean_us, min_us) over ``iters`` timed calls after a compile call.
+
+    ``perf_counter`` (monotonic, highest available resolution — ``time.time``
+    is wall-clock and jitters with NTP slews) around *each* call; the min
+    is the least-perturbed sample and the number to trend, the mean shows
+    scheduler noise on a loaded host."""
     fn(*args)  # compile
-    t0 = time.time()
+    samples = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         out = fn(*args)
-    jax.tree.map(lambda a: a.block_until_ready(), out)
-    return (time.time() - t0) / iters * 1e6
+        jax.tree.map(lambda a: a.block_until_ready(), out)
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return sum(samples) / iters, min(samples)
 
 
 def run() -> list[dict]:
@@ -35,9 +43,10 @@ def run() -> list[dict]:
     v = jax.random.normal(ks[2], (b, s, kv, dh), jnp.bfloat16)
     pos = jnp.arange(s, dtype=jnp.int32)
     f = jax.jit(lambda *a: ref.flash_attention_ref(*a, pos, pos))
-    us = _time(f, q, k, v)
+    us, us_min = _time(f, q, k, v)
     flops = 4 * b * s * s * h * dh * 0.5
     rows.append(dict(name="attention_ref_1k", us_per_call=round(us, 1),
+                     us_min=round(us_min, 1),
                      derived=f"{flops/us/1e3:.1f}MFLOP/s_cpu"))
 
     # GLA chunked oracle
@@ -49,9 +58,9 @@ def run() -> list[dict]:
     lf = -jax.nn.softplus(-jax.random.normal(ks[3], (bq, sq, hq)))
     li = -jax.nn.softplus(-jax.random.normal(ks[4], (bq, sq, hq)))
     g = jax.jit(lambda *a: chunked_gla(*a, chunk=128)[0])
-    us = _time(g, qg, kg, vg, lf, li)
+    us, us_min = _time(g, qg, kg, vg, lf, li)
     rows.append(dict(name="gla_chunked_1k", us_per_call=round(us, 1),
-                     derived=f"chunk128"))
+                     us_min=round(us_min, 1), derived=f"chunk128"))
 
     # eviction ranking kernel (interpret) vs jnp ref — correctness-critical path
     n = 8192
@@ -61,9 +70,17 @@ def run() -> list[dict]:
     sz = jax.random.uniform(ks[3], (n,), minval=1, maxval=100)
     c = jnp.ones((n,), bool)
     fr = jax.jit(lambda *a: ref.ranking_scores_ref(*a, 1.0)[0])
-    us = _time(fr, lam, z, r, sz, c)
+    us, us_min = _time(fr, lam, z, r, sz, c)
     rows.append(dict(name="ranking_ref_8k", us_per_call=round(us, 1),
-                     derived=f"{n/us:.1f}obj/us"))
+                     us_min=round(us_min, 1), derived=f"{n/us:.1f}obj/us"))
+
+    # fused rank-and-select oracle (score + masked top-E victim order) —
+    # the evict-until-fit loop's precomputed diet (DESIGN.md §10)
+    fs = jax.jit(lambda *a: ref.victim_order_ref(
+        ref.ranking_scores_ref(*a, 1.0)[0], a[4], 8))
+    us, us_min = _time(fs, lam, z, r, sz, c)
+    rows.append(dict(name="rank_select_ref_8k", us_per_call=round(us, 1),
+                     us_min=round(us_min, 1), derived=f"top8"))
     return rows
 
 

@@ -1,0 +1,162 @@
+"""Sweep-engine dispatch benchmark: unified multi-policy graph vs
+sequential per-policy dispatch, and the PR-1 omega-sweep target, re-measured
+on the overhauled hot path (shared-substrate scoring — DESIGN.md §10).
+
+Two questions, answered with warm-graph wall-clock (compile excluded and
+reported separately, since the persistent XLA cache makes it a one-time
+cost):
+
+* **roster**: is ONE unified multi-policy call still slower than a python
+  loop of statically specialized per-policy calls on this hardware?  This
+  was EXPERIMENTS §Perf's "lockstep union penalty" — the unified graph used
+  to stack all P rank functions per commit; with the substrate/epilogue
+  split it computes one estimator pass + P cheap epilogues.
+* **omega**: batched omega-grid sweep vs a sequential per-point loop
+  (PR 1's ≥5× target workload).
+
+Writes ``BENCH_sweep.json`` at the repo root (machine-readable perf
+trajectory) plus the usual CSV row dump.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.core import PolicyParams, simulate, sweep_grid
+from repro.data.traces import SyntheticSpec, synthetic_trace
+
+from .common import POLICY_SET, emit, block_until_ready_tree, write_bench_json
+
+ITERS = 3
+
+
+def _timed(fn, iters: int = ITERS):
+    """(first_call_s, warm_mean_s, warm_min_s) — first call pays compile."""
+    t0 = time.perf_counter()
+    block_until_ready_tree(fn())
+    first = time.perf_counter() - t0
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        block_until_ready_tree(fn())
+        samples.append(time.perf_counter() - t0)
+    return first, sum(samples) / iters, min(samples)
+
+
+def run(full: bool = False) -> list[dict]:
+    n_req = 30_000 if full else 10_000
+    spec = SyntheticSpec(n_objects=100, n_requests=n_req, rate=2000.0,
+                         latency_base=0.02, latency_per_mb=5e-4,
+                         stochastic=True)
+    trace = synthetic_trace(jax.random.key(5), spec)
+    cap = 500.0
+    params = PolicyParams(omega=1.0)
+    rows = []
+
+    # --- full-roster: unified one-call vs sequential per-policy ----------
+    names = list(POLICY_SET)
+
+    def unified():
+        return sweep_grid(trace, cap, names, [params]).result
+
+    def sequential():
+        return [sweep_grid(trace, cap, pol, [params]).result
+                for pol in names]
+
+    u_first, u_warm, u_min = _timed(unified)
+    s_first, s_warm, s_min = _timed(sequential)
+    sims = len(names) * n_req
+    rows += [
+        dict(name="roster_unified", mode="one multi-policy call",
+             n_policies=len(names), first_call_s=round(u_first, 3),
+             warm_s=round(u_warm, 3), warm_min_s=round(u_min, 3),
+             req_per_s=int(sims / u_warm)),
+        dict(name="roster_sequential", mode="per-policy loop",
+             n_policies=len(names), first_call_s=round(s_first, 3),
+             warm_s=round(s_warm, 3), warm_min_s=round(s_min, 3),
+             req_per_s=int(sims / s_warm)),
+    ]
+
+    # --- large-N roster: the fig2/fig5 regime ----------------------------
+    # the substrate split removed the rank-stack term of the lockstep
+    # penalty, but at large N the unified graph's one-hot serve-path writes
+    # (O(N) selects per request vs the static graphs' O(1) scatters) still
+    # dominate — this section keeps that regime honest in the trajectory
+    nspec = SyntheticSpec(n_objects=3000, n_requests=n_req, rate=2000.0,
+                          latency_base=0.02, latency_per_mb=5e-4,
+                          stochastic=True)
+    ntrace = synthetic_trace(jax.random.key(5), nspec)
+
+    def unified_n():
+        return sweep_grid(ntrace, 1500.0, names, [params]).result
+
+    def sequential_n():
+        return [sweep_grid(ntrace, 1500.0, pol, [params]).result
+                for pol in names]
+
+    un_first, un_warm, un_min = _timed(unified_n, iters=1)
+    sn_first, sn_warm, sn_min = _timed(sequential_n, iters=1)
+    sims = len(names) * n_req
+    rows += [
+        dict(name="roster3000_unified", mode="one multi-policy call",
+             n_policies=len(names), first_call_s=round(un_first, 3),
+             warm_s=round(un_warm, 3), warm_min_s=round(un_min, 3),
+             req_per_s=int(sims / un_warm)),
+        dict(name="roster3000_sequential", mode="per-policy loop",
+             n_policies=len(names), first_call_s=round(sn_first, 3),
+             warm_s=round(sn_warm, 3), warm_min_s=round(sn_min, 3),
+             req_per_s=int(sims / sn_warm)),
+    ]
+
+    # --- omega sweep: batched grid vs sequential per-point ---------------
+    omegas = (0.0, 0.5, 1.0, 1.5, 2.0, 3.0)
+    plist = [PolicyParams(omega=o) for o in omegas]
+
+    def batched():
+        return sweep_grid(trace, cap, "stoch_vacdh", plist).result
+
+    def per_point():
+        return [simulate(trace, cap, "stoch_vacdh", p) for p in plist]
+
+    b_first, b_warm, b_min = _timed(batched)
+    p_first, p_warm, p_min = _timed(per_point)
+    sims = len(omegas) * n_req
+    rows += [
+        dict(name="omega_batched", mode="one batched grid",
+             n_points=len(omegas), first_call_s=round(b_first, 3),
+             warm_s=round(b_warm, 3), warm_min_s=round(b_min, 3),
+             req_per_s=int(sims / b_warm)),
+        dict(name="omega_sequential", mode="per-point loop",
+             n_points=len(omegas), first_call_s=round(p_first, 3),
+             warm_s=round(p_warm, 3), warm_min_s=round(p_min, 3),
+             req_per_s=int(sims / p_warm)),
+    ]
+
+    write_bench_json("BENCH_sweep.json", dict(
+        benchmark="bench_sweep",
+        workload=dict(n_objects=spec.n_objects, n_objects_large=3000,
+                      n_requests=n_req, capacity=cap, roster=names,
+                      omegas=list(omegas)),
+        rows=rows,
+        summary=dict(
+            roster_unified_over_sequential=round(
+                rows[1]["warm_s"] / max(rows[0]["warm_s"], 1e-9), 3),
+            roster3000_unified_over_sequential=round(
+                rows[3]["warm_s"] / max(rows[2]["warm_s"], 1e-9), 3),
+            omega_batched_over_sequential=round(
+                rows[5]["warm_s"] / max(rows[4]["warm_s"], 1e-9), 3)),
+    ))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    emit(run(full=args.full), "bench_sweep")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,9 +10,40 @@ import jax
 import jax.numpy as jnp
 
 RESULTS_DIR = Path(__file__).parent / "results"
+REPO_ROOT = Path(__file__).parent.parent
 
 POLICY_SET = ["lru", "lfu", "lhd", "adaptsize", "lru_mad", "lhd_mad",
               "lac", "cala", "vacdh", "lrb_lite", "stoch_vacdh"]
+
+
+def write_bench_json(filename: str, payload: dict,
+                     path: Path | str | None = None) -> Path:
+    """Write a machine-readable perf-trajectory snapshot at the repo root
+    (or at ``path`` — CI's smoke artifact reuses the same schema).
+
+    ``BENCH_stream.json`` / ``BENCH_sweep.json`` exist so future PRs can
+    diff measured req/s, wall-clock, and peak RSS against this one instead
+    of re-reading EXPERIMENTS prose.  The environment fields make cross-PR
+    numbers interpretable (a TPU row and a 2-vCPU row are different
+    experiments, not a regression) — one stamping function so every
+    artifact shares one schema."""
+    import json
+    import os
+    import platform
+    from datetime import datetime, timezone
+
+    payload = dict(payload)
+    payload.setdefault("backend", jax.default_backend())
+    payload.setdefault("cpu_count", os.cpu_count())
+    payload.setdefault("platform", platform.platform())
+    payload.setdefault("jax_version", jax.__version__)
+    payload.setdefault(
+        "generated_utc",
+        datetime.now(timezone.utc).isoformat(timespec="seconds"))
+    path = Path(path) if path is not None else REPO_ROOT / filename
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {path}")
+    return path
 
 
 def emit(rows: list[dict], name: str, echo: bool = True) -> Path:

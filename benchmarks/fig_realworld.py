@@ -26,7 +26,7 @@ from repro.core.trace import trace_of_stream
 from repro.data.traces import (RealWorldSpec, compact_requests,
                                load_trace_bin, realworld_raw, save_trace_bin)
 
-from .common import POLICY_SET, RESULTS_DIR, emit
+from .common import POLICY_SET, RESULTS_DIR, emit, write_bench_json
 
 CHUNK_SIZE = 131_072
 
@@ -127,6 +127,29 @@ def run(full: bool = False) -> list[dict]:
                        capacity_probe=round(pcap, 1),
                        n_objects_probe=pstats.n_objects,
                        tail_mass_probe=round(pstats.tail_mass, 4)))
+
+    # machine-readable perf trajectory (BENCH_stream.json at the repo root):
+    # the streamed roster replays + the monolithic-device comparison row
+    roster = [r for r in rows if r.get("section") == "roster"]
+    device = [r for r in rows if r.get("section") == "overhead"]
+    keep = ("policy", "req_per_s", "sim_s", "peak_rss_mb",
+            "improvement_vs_lru", "hit_ratio")
+    write_bench_json("BENCH_stream.json", dict(
+        benchmark="fig_realworld_stream",
+        workload=dict(n_requests=n_req, n_objects=stats.n_objects,
+                      chunk_size=CHUNK_SIZE,
+                      tail_mass=round(stats.tail_mass, 4),
+                      capacity=round(capacity, 1)),
+        rows=[{k: r[k] for k in keep if k in r} for r in roster],
+        device_mode=[{k: r[k] for k in ("policy", "req_per_s", "sim_s",
+                                        "peak_rss_mb") if k in r}
+                     for r in device],
+        aggregate=dict(
+            total_sim_s=round(sum(r["sim_s"] for r in roster), 1),
+            mean_req_per_s=int(sum(r["req_per_s"] for r in roster)
+                               / max(len(roster), 1)),
+            peak_rss_mb=max(r["peak_rss_mb"] for r in roster)),
+    ))
     return rows
 
 

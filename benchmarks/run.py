@@ -1,6 +1,10 @@
 """Benchmark driver: one function per paper table/figure.
 Prints ``name,us_per_call,derived``-style CSV per benchmark and writes
 benchmarks/results/*.csv.  --full reproduces the paper-scale settings.
+The ``realworld`` and ``sweep`` jobs additionally write machine-readable
+perf-trajectory snapshots (``BENCH_stream.json`` / ``BENCH_sweep.json``)
+at the repo root so future PRs can diff req/s, wall-clock, and peak RSS
+without re-reading EXPERIMENTS prose.
 
 XLA's persistent compilation cache is enabled under
 ``benchmarks/.jax_cache`` so repeat invocations skip graph compiles — the
@@ -30,7 +34,7 @@ def main() -> int:
                     help="paper-scale sizes (slower)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig3,fig4,fig5,fig6,realworld,"
-                         "kernels")
+                         "kernels,sweep")
     ap.add_argument("--no-compile-cache", action="store_true",
                     help="disable the persistent XLA compilation cache")
     args = ap.parse_args()
@@ -38,9 +42,9 @@ def main() -> int:
         _enable_compile_cache()
     want = set(args.only.split(",")) if args.only else None
 
-    from . import (bench_kernels, fig2_synthetic, fig3_trace_stats,
-                   fig4_sensitivity, fig5_real_traces, fig6_hierarchy,
-                   fig_realworld)
+    from . import (bench_kernels, bench_sweep, fig2_synthetic,
+                   fig3_trace_stats, fig4_sensitivity, fig5_real_traces,
+                   fig6_hierarchy, fig_realworld)
     from .common import emit
 
     jobs = [
@@ -56,6 +60,10 @@ def main() -> int:
         ("realworld", lambda: emit(fig_realworld.run(full=args.full),
                                    "fig_realworld")),
         ("kernels", lambda: emit(bench_kernels.run(), "bench_kernels")),
+        # realworld/sweep also refresh the BENCH_stream.json /
+        # BENCH_sweep.json perf-trajectory snapshots at the repo root
+        ("sweep", lambda: emit(bench_sweep.run(full=args.full),
+                               "bench_sweep")),
     ]
     for name, fn in jobs:
         if want and name not in want:

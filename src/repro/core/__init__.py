@@ -17,7 +17,8 @@ from .distributions import (DISTRIBUTIONS, Deterministic, Erlang, Exponential,
                             make_distribution)
 from .hierarchy import (HierResult, HierTrace, make_hier_trace,
                         simulate_hier, simulate_hier_chunked)
-from .ranking import BASELINES, OURS, POLICIES, Policy, PolicyParams
+from .ranking import (BASELINES, OURS, POLICIES, Policy, PolicyParams,
+                      Substrate, make_substrate)
 from .simulator import (SimResult, latency_improvement, simulate,
                         simulate_chunked, simulate_stream)
 from .sweep import HierSweepGrid, SweepGrid, sweep_grid, sweep_hier_grid
@@ -30,6 +31,7 @@ __all__ = [
     "DISTRIBUTIONS", "Deterministic", "Erlang", "Exponential",
     "Hyperexponential", "MissLatency", "MonteCarlo", "make_distribution",
     "BASELINES", "OURS", "POLICIES", "Policy", "PolicyParams",
+    "Substrate", "make_substrate",
     "HierResult", "HierTrace", "make_hier_trace", "simulate_hier",
     "simulate_hier_chunked",
     "SimResult", "latency_improvement", "simulate", "simulate_chunked",

@@ -26,7 +26,9 @@ serve core from :mod:`repro.core.simulator` — :func:`_commit_one`,
 :func:`_commit_due`, :func:`_serve` — parameterized by the same
 :class:`_Behavior`, so per-tier semantics are the single-tier semantics by
 construction (parity: :func:`repro.core.refsim.simulate_hier_ref`,
-tests/test_hierarchy.py).
+tests/test_hierarchy.py), and both tiers inherit the overhauled hot path
+(shared-substrate scoring, scalar serve-path gathers, fused
+rank-and-select eviction — DESIGN.md §10) for free.
 
 Randomness (origin draws, hop draws, shard routing) is pre-drawn into
 :class:`HierTrace`, so the scan, the event-driven oracle, and the sweep

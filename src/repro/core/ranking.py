@@ -9,10 +9,26 @@ semantics).
 The paper's contribution is :func:`rank_stochastic_vacdh` (eq. 16), built on
 Theorem 2; every baseline from §5.1 is implemented alongside, under the same
 online-estimation substrate, so comparisons are apples-to-apples.
+
+**Hot-path layout (DESIGN.md §10).**  Every rank in the registry shares one
+estimator pass: arrival rate, residual time, the aggregate-delay moments
+(analytic and historical), and the ``R * size`` normalizer.  That pass is
+factored into :func:`make_substrate`, computed ONCE per commit into a
+:class:`Substrate` (fields lazy + memoized, so callers trace or compute
+only what they read); each policy's rank is then a few-op *epilogue*
+over it (``epi_*``, registered as ``Policy.epilogue``).  The unified
+multi-policy graph scores P policies as one substrate + P epilogues
+instead of P full rank stacks — O(N + P·N_cheap) instead of O(P·N) — and
+a single-policy graph (jitted or eager) computes exactly the fields its
+epilogue reads.  The legacy ``rank(o, sizes, t, p)``
+signature survives as the substrate+epilogue composition (the event-driven
+oracle :mod:`repro.core.refsim` calls it directly), so both entry points are
+the same arithmetic by construction.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax
@@ -148,101 +164,222 @@ def agg_std_hat(o: ObjStats) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Ranking functions.  Signature: (obj, sizes, t, params) -> scores [N]
+# Scalar-at-index estimators (the O(1) serve path, DESIGN.md §10).
+# Element j of the [N]-vector estimators above, as pure scalar gathers —
+# elementwise ops on a gathered element are bit-identical to gathering
+# element j of the vector result, so the serve path can stop materializing
+# N-vectors for one scalar.
 # ---------------------------------------------------------------------------
-RankFn = Callable[[ObjStats, jax.Array, jax.Array, PolicyParams], jax.Array]
+def lambda_hat_at(o: ObjStats, p: PolicyParams, j) -> jax.Array:
+    """``lambda_hat(o, p)[j]`` without building the [N] vector."""
+    lam = 1.0 / jnp.maximum(o.gap_mean[j], EPS)
+    return jnp.where(o.count[j] >= 2.0, lam, p.cold_rate)
 
 
-def rank_lru(o, sizes, t, p):
+def agg_mean_hat_at(o: ObjStats, j) -> jax.Array:
+    """``agg_mean_hat(o)[j]`` without building the [N] vector."""
+    m = o.agg_sum[j] / jnp.maximum(o.agg_cnt[j], 1.0)
+    return jnp.where(o.agg_cnt[j] > 0.0, m, o.z_est[j])
+
+
+# ---------------------------------------------------------------------------
+# Shared scoring substrate (computed once per commit; DESIGN.md §10).
+# ---------------------------------------------------------------------------
+class Substrate:
+    """The shared estimator state every registered rank reads from.
+
+    Fields are [N] arrays, computed **lazily on first access** and memoized
+    per instance: a statically specialized single-policy graph traces only
+    the fields its epilogue touches (LRU's graph never computes a moment —
+    enforced by laziness, not left to XLA dead-code elimination, so eager
+    callers like the event-driven oracle and the serving engine pay only
+    what they read too), while the unified multi-policy graph amortizes
+    each field across every lane's epilogue that reads it.  Field
+    arithmetic is lifted verbatim from the pre-substrate rank functions, so
+    epilogue(substrate) is bit-for-bit the historical rank value.
+
+    lam / resid     — lambda_hat(o, p) / residual_hat(o, t, p)
+    size_eps, denom — max(sizes, EPS) and resid * size_eps (eq. 15/16's
+                      normalizer)
+    det_mean/std    — Theorem-1 moments (VA-CDH / LAC / CALA's model)
+    dist_mean/std   — moments under ``p.dist`` (eq. 16, generalized)
+    hist_mean/std   — historical episode moments (CALA / toy policies)
+    last_access, count, gd_h, z_est — pass-throughs from ``ObjStats``
+    """
+
+    def __init__(self, o: ObjStats, sizes, t, p: PolicyParams):
+        self.obj = o
+        self.sizes = sizes
+        self.t = t
+        self.p = p
+        self.last_access = o.last_access
+        self.count = o.count
+        self.gd_h = o.gd_h
+        self.z_est = o.z_est
+
+    @functools.cached_property
+    def lam(self):
+        return lambda_hat(self.obj, self.p)
+
+    @functools.cached_property
+    def resid(self):
+        return residual_hat(self.obj, self.t, self.p)
+
+    @functools.cached_property
+    def size_eps(self):
+        return jnp.maximum(self.sizes, EPS)
+
+    @functools.cached_property
+    def denom(self):
+        return self.resid * self.size_eps
+
+    @functools.cached_property
+    def det_mean(self):
+        return _DET.agg_mean(self.lam, self.z_est)
+
+    @functools.cached_property
+    def det_std(self):
+        return _DET.agg_std(self.lam, self.z_est)
+
+    @functools.cached_property
+    def dist_mean(self):
+        return self.p.dist.agg_mean(self.lam, self.z_est)
+
+    @functools.cached_property
+    def dist_std(self):
+        return self.p.dist.agg_std(self.lam, self.z_est)
+
+    @functools.cached_property
+    def hist_mean(self):
+        return agg_mean_hat(self.obj)
+
+    @functools.cached_property
+    def hist_std(self):
+        return agg_std_hat(self.obj)
+
+
+def make_substrate(o: ObjStats, sizes, t, p: PolicyParams) -> Substrate:
+    """The shared (lazy, memoized) estimator pass at time ``t``."""
+    return Substrate(o, sizes, t, p)
+
+
+# ---------------------------------------------------------------------------
+# Rank epilogues.  Signature: (substrate, params) -> scores [N] — a few
+# vector ops each; everything O(N)-expensive lives in make_substrate.
+# ---------------------------------------------------------------------------
+EpilogueFn = Callable[[Substrate, PolicyParams], jax.Array]
+
+
+def epi_lru(s, p):
     """LRU — most recently used is most valuable."""
-    return o.last_access
+    return s.last_access
 
 
-def rank_lfu(o, sizes, t, p):
+def epi_lfu(s, p):
     """LFU — request count."""
-    return o.count
+    return s.count
 
 
-def rank_lhd(o, sizes, t, p):
+def epi_lhd(s, p):
     """LHD-lite: hit density = expected hit rate per byte.
 
     The full LHD maintains age-binned hit/eviction histograms; under Poisson
     arrivals its hit density converges to lambda/size, which is what the
     online estimate here computes.  Documented approximation (DESIGN.md §4).
     """
-    return lambda_hat(o, p) / jnp.maximum(sizes, EPS)
+    return s.lam / s.size_eps
 
 
-def rank_adaptsize(o, sizes, t, p):
+def epi_adaptsize(s, p):
     """AdaptSize ranks like LRU; its contribution is the size-aware admission
     filter (handled by the simulator via ``admission='adaptsize'``)."""
-    return o.last_access
+    return s.last_access
 
 
-def rank_greedydual(o, sizes, t, p):
+def epi_greedydual(s, p):
     """GreedyDual H value — used by LRU-MAD / LHD-MAD; H maintained by the
     simulator (clock + cost/size on access, clock <- H_victim on eviction)."""
-    return o.gd_h
+    return s.gd_h
 
 
-def rank_lac(o, sizes, t, p):
+def epi_lac(s, p):
     """LAC: mean aggregate delay under *deterministic* latency, per byte and
     per unit residual time (variance-blind; omega = 0)."""
-    lam = lambda_hat(o, p)
-    e = _DET.agg_mean(lam, o.z_est)
-    return e / (residual_hat(o, t, p) * jnp.maximum(sizes, EPS))
+    return s.det_mean / s.denom
 
 
-def rank_cala(o, sizes, t, p):
+def epi_cala(s, p):
     """CALA: weighted blend of historical AggDelay and the analytic estimate
     (balances imprecise averages vs conservative bounds, per §1)."""
-    lam = lambda_hat(o, p)
-    analytic = _DET.agg_mean(lam, o.z_est)
-    est = p.cala_beta * agg_mean_hat(o) + (1.0 - p.cala_beta) * analytic
-    return est / (residual_hat(o, t, p) * jnp.maximum(sizes, EPS))
+    est = p.cala_beta * s.hist_mean + (1.0 - p.cala_beta) * s.det_mean
+    return est / s.denom
 
 
-def rank_vacdh(o, sizes, t, p):
+def epi_vacdh(s, p):
     """VA-CDH [16]: eq. 15 with Theorem 1 (deterministic-latency) moments."""
-    lam = lambda_hat(o, p)
-    e = _DET.agg_mean(lam, o.z_est)
-    s = _DET.agg_std(lam, o.z_est)
-    return (e + p.omega * s) / (residual_hat(o, t, p) * jnp.maximum(sizes, EPS))
+    return (s.det_mean + p.omega * s.det_std) / s.denom
 
 
-def rank_stochastic_vacdh(o, sizes, t, p):
+def epi_stochastic_vacdh(s, p):
     """THE PAPER, generalized: eq. 16 with the moments of ``p.dist``.
 
     With the default ``dist=Exponential()`` this is bit-for-bit the paper's
     eq. 16 (Theorem-2 closed forms); Erlang / Hyperexponential / MonteCarlo
     swap in their aggregate-delay moments via the same compound-Poisson
     identity (DESIGN.md §3)."""
-    lam = lambda_hat(o, p)
-    e = p.dist.agg_mean(lam, o.z_est)
-    s = p.dist.agg_std(lam, o.z_est)
-    return (e + p.omega * s) / (residual_hat(o, t, p) * jnp.maximum(sizes, EPS))
+    return (s.dist_mean + p.omega * s.dist_std) / s.denom
 
 
-def rank_lrb_lite(o, sizes, t, p):
+def epi_lrb_lite(s, p):
     """LRB-lite: learned-baseline stand-in — score by predicted next-use
     proximity blending recency and rate (a fixed linear model over the same
     features LRB learns; see DESIGN.md §4)."""
-    lam = lambda_hat(o, p)
-    r = residual_hat(o, t, p)
     # Expected remaining time to next arrival for a Poisson process given the
     # age r is 1/lam regardless; blend with recency to mimic LRB's learned mix.
-    pred_next = 1.0 / jnp.maximum(lam, EPS) + 0.5 * r
-    return -pred_next / jnp.maximum(sizes, EPS) * agg_mean_hat(o)
+    pred_next = 1.0 / jnp.maximum(s.lam, EPS) + 0.5 * s.resid
+    return -pred_next / s.size_eps * s.hist_mean
 
 
-def rank_toy_mean(o, sizes, t, p):
+def epi_toy_mean(s, p):
     """Fig.1 Policy 1 — empirical mean aggregate delay, unnormalized."""
-    return agg_mean_hat(o)
+    return s.hist_mean
 
 
-def rank_toy_meanstd(o, sizes, t, p):
+def epi_toy_meanstd(s, p):
     """Fig.1 Policy 2 — empirical mean + population std, unnormalized."""
-    return agg_mean_hat(o) + agg_std_hat(o)
+    return s.hist_mean + s.hist_std
+
+
+# ---------------------------------------------------------------------------
+# Legacy rank entry points.  Signature: (obj, sizes, t, params) -> [N] —
+# the substrate+epilogue composition under the historical name (the
+# event-driven oracle and external callers use these; same arithmetic).
+# ---------------------------------------------------------------------------
+RankFn = Callable[[ObjStats, jax.Array, jax.Array, PolicyParams], jax.Array]
+
+
+def _rank_of(epilogue: EpilogueFn, name: str) -> RankFn:
+    def rank(o, sizes, t, p):
+        return epilogue(make_substrate(o, sizes, t, p), p)
+    rank.__name__ = name
+    rank.__qualname__ = name
+    rank.__doc__ = epilogue.__doc__
+    return rank
+
+
+rank_lru = _rank_of(epi_lru, "rank_lru")
+rank_lfu = _rank_of(epi_lfu, "rank_lfu")
+rank_lhd = _rank_of(epi_lhd, "rank_lhd")
+rank_adaptsize = _rank_of(epi_adaptsize, "rank_adaptsize")
+rank_greedydual = _rank_of(epi_greedydual, "rank_greedydual")
+rank_lac = _rank_of(epi_lac, "rank_lac")
+rank_cala = _rank_of(epi_cala, "rank_cala")
+rank_vacdh = _rank_of(epi_vacdh, "rank_vacdh")
+rank_stochastic_vacdh = _rank_of(epi_stochastic_vacdh,
+                                 "rank_stochastic_vacdh")
+rank_lrb_lite = _rank_of(epi_lrb_lite, "rank_lrb_lite")
+rank_toy_mean = _rank_of(epi_toy_mean, "rank_toy_mean")
+rank_toy_meanstd = _rank_of(epi_toy_meanstd, "rank_toy_meanstd")
 
 
 # ---------------------------------------------------------------------------
@@ -252,6 +389,7 @@ def rank_toy_meanstd(o, sizes, t, p):
 class Policy:
     name: str
     rank: RankFn
+    epilogue: EpilogueFn
     greedydual: bool = False       # maintain gd_h / clock
     gd_cost: str = "agg"           # 'agg' (LRU-MAD) | 'agg_rate' (LHD-MAD)
     admission: str = "always"      # 'always' | 'adaptsize'
@@ -263,20 +401,23 @@ class Policy:
 
 
 POLICIES: dict[str, Policy] = {
-    "lru": Policy("lru", rank_lru, compare_admission=False),
-    "lfu": Policy("lfu", rank_lfu, compare_admission=False),
-    "lhd": Policy("lhd", rank_lhd, compare_admission=False),
-    "adaptsize": Policy("adaptsize", rank_adaptsize, admission="adaptsize",
-                        compare_admission=False),
-    "lru_mad": Policy("lru_mad", rank_greedydual, greedydual=True, gd_cost="agg"),
-    "lhd_mad": Policy("lhd_mad", rank_greedydual, greedydual=True, gd_cost="agg_rate"),
-    "lac": Policy("lac", rank_lac),
-    "cala": Policy("cala", rank_cala),
-    "vacdh": Policy("vacdh", rank_vacdh),
-    "stoch_vacdh": Policy("stoch_vacdh", rank_stochastic_vacdh),  # ours
-    "lrb_lite": Policy("lrb_lite", rank_lrb_lite),
-    "toy_mean": Policy("toy_mean", rank_toy_mean),
-    "toy_meanstd": Policy("toy_meanstd", rank_toy_meanstd),
+    "lru": Policy("lru", rank_lru, epi_lru, compare_admission=False),
+    "lfu": Policy("lfu", rank_lfu, epi_lfu, compare_admission=False),
+    "lhd": Policy("lhd", rank_lhd, epi_lhd, compare_admission=False),
+    "adaptsize": Policy("adaptsize", rank_adaptsize, epi_adaptsize,
+                        admission="adaptsize", compare_admission=False),
+    "lru_mad": Policy("lru_mad", rank_greedydual, epi_greedydual,
+                      greedydual=True, gd_cost="agg"),
+    "lhd_mad": Policy("lhd_mad", rank_greedydual, epi_greedydual,
+                      greedydual=True, gd_cost="agg_rate"),
+    "lac": Policy("lac", rank_lac, epi_lac),
+    "cala": Policy("cala", rank_cala, epi_cala),
+    "vacdh": Policy("vacdh", rank_vacdh, epi_vacdh),
+    "stoch_vacdh": Policy("stoch_vacdh", rank_stochastic_vacdh,
+                          epi_stochastic_vacdh),  # ours
+    "lrb_lite": Policy("lrb_lite", rank_lrb_lite, epi_lrb_lite),
+    "toy_mean": Policy("toy_mean", rank_toy_mean, epi_toy_mean),
+    "toy_meanstd": Policy("toy_meanstd", rank_toy_meanstd, epi_toy_meanstd),
 }
 
 OURS = "stoch_vacdh"

@@ -11,11 +11,15 @@ Eviction follows the paper's §2.2 semantics: evict the lowest-ranked cached
 object while its rank is strictly below the incoming object's rank; if space
 still cannot be freed, the incoming object is not admitted.
 
-The per-commit scoring hot path can run through the fused Pallas kernel
-(:mod:`repro.kernels.ranking_score`) via ``use_kernel`` — compiled on TPU,
-interpret-mode or the jnp reference on CPU (DESIGN.md §3).  The unjitted
-:func:`_simulate_impl` is the composition point for :mod:`repro.core.sweep`,
-which vmaps it over whole hyperparameter grids.
+The per-commit scoring hot path is one shared-substrate pass
+(:func:`repro.core.ranking.make_substrate`) with the policy's rank as a
+cheap epilogue, fused with a masked top-E victim-order select that the
+evict-until-fit loop consumes in O(1) per victim (DESIGN.md §10); it can
+run through the fused Pallas kernel (:mod:`repro.kernels.ranking_score`)
+via ``use_kernel`` — compiled on TPU, interpret-mode or the jnp reference
+on CPU (DESIGN.md §3).  The unjitted :func:`_simulate_impl` is the
+composition point for :mod:`repro.core.sweep`, which vmaps it over whole
+hyperparameter grids.
 
 The commit/evict/serve core is deliberately exposed as free functions over
 ``(_Behavior, PolicyParams, SimState)`` — :func:`_commit_one`,
@@ -34,13 +38,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from .distributions import Exponential
-from .ranking import (POLICIES, Policy, PolicyParams, lambda_hat,
-                      rank_stochastic_vacdh, residual_hat)
+from .ranking import (POLICIES, Policy, PolicyParams, agg_mean_hat_at,
+                      epi_stochastic_vacdh, lambda_hat_at, make_substrate)
 from .state import (SimState, init_state, kahan_add, onehot_add, onehot_set,
                     shift_times)
 from .trace import RequestStream, Trace, stream_of_trace
 
 _EPS = 1e-6
+
+# How many victims the fused rank-and-select pass pre-orders per commit
+# (DESIGN.md §10).  Evicting more than EVICT_TOP objects for one admission
+# falls back to the legacy per-eviction argmin loop (bitwise-identical
+# continuation); 0 disables the precomputed order entirely — the pre-overhaul
+# graph, kept as the parity suite's reference (tests/test_hotpath.py).
+EVICT_TOP = 8
 
 
 def _tree_sel(flag, new, old):
@@ -71,11 +82,15 @@ def _sel(flag, a, b):
 class _Behavior(NamedTuple):
     """How one simulation lane ranks, admits, and writes — possibly traced.
 
-    ``score(o, sizes, t) -> [N]`` closes over the policy/params;
+    ``select(o, sizes, t, top) -> (ranks [N], idx [top], vals [top])`` is
+    the fused rank-and-select pass: the full score vector plus the masked
+    ascending victim order (DESIGN.md §10), closing over policy/params;
     ``greedydual``/``gd_rate``/``adaptsize``/``compare_admission`` mirror
     :class:`repro.core.ranking.Policy` flags, as python bools (static path)
-    or traced 0-d bools (multi-policy path).  Two fields are always
-    python-static:
+    or traced 0-d bools (multi-policy path).  Static python-False flags
+    fold the corresponding machinery out of the traced graph altogether
+    (:func:`_static_false`); traced flags keep the lockstep selects.  Three
+    fields are always python-static:
 
     ``split_key`` — whether the admission coin stream is advanced every
     commit (always True in multi mode so lanes stay in lockstep; only
@@ -86,15 +101,21 @@ class _Behavior(NamedTuple):
     the graph will be vmapped (batched scatters with lane-varying indices
     loop on XLA:CPU; selects stay elementwise).  Both write bit-identical
     states, so the choice never shows up in results (tests/test_sweep.py).
+
+    ``evict_top`` — length of the precomputed victim order consumed by the
+    evict-until-fit loop (module default :data:`EVICT_TOP`; 0 = legacy
+    per-eviction argmin only).  Any value yields bitwise-identical results
+    (tests/test_hotpath.py) — it is purely a dispatch-shape knob.
     """
 
-    score: object
+    select: object
     greedydual: object
     gd_rate: object
     adaptsize: object
     compare_admission: object
     split_key: bool
     onehot: bool
+    evict_top: int
 
     # --- state writes (see ``onehot``) -----------------------------------
     def set_at(self, x, j, jhot, val):
@@ -104,38 +125,125 @@ class _Behavior(NamedTuple):
         return onehot_add(x, jhot, val) if self.onehot else x.at[j].add(val)
 
 
+def _static_false(flag) -> bool:
+    """True iff ``flag`` is a *python-static* False — the machinery it
+    guards can then be omitted from the traced graph altogether (stronger
+    than ``_sel``'s constant fold: not even a self-assignment is traced)."""
+    return isinstance(flag, (bool, np.bool_)) and not bool(flag)
+
+
+def _empty_order(top: int):
+    return jnp.zeros((top,), jnp.int32), jnp.zeros((top,), jnp.float32)
+
+
+def _kernelable(q: Policy, p: PolicyParams, score_mode: str) -> bool:
+    """May this (policy, dist, mode) score through the kernel family?
+    The kernel hard-codes Theorem-2 (Exponential) moments — everything
+    else scores via its epilogue.  The ONE eligibility rule for both the
+    static and multi-policy paths."""
+    return (score_mode != "rank" and q.epilogue is epi_stochastic_vacdh
+            and isinstance(p.dist, Exponential))
+
+
+def _kernel_row(q: Policy, p: PolicyParams, score_mode: str, sub, o, sizes):
+    """Eq.-16 score row via the kernel family, or None when this policy
+    must score via its epilogue (shared by the static and multi paths so
+    backend routing cannot drift between them)."""
+    if not _kernelable(q, p, score_mode):
+        return None
+    if score_mode == "ref":
+        from repro.kernels.ref import ranking_scores_ref
+        ranks, _, _ = ranking_scores_ref(sub.lam, sub.z_est, sub.resid,
+                                         sizes, o.cached, p.omega)
+        return ranks
+    from repro.kernels.ranking_score import ranking_scores
+    ranks, _, _ = ranking_scores(
+        sub.lam, sub.z_est, sub.resid, sizes, o.cached, omega=p.omega,
+        interpret=(score_mode == "kernel_interpret"))
+    return ranks
+
+
+def _rank_select_static(policy: Policy, p: PolicyParams, score_mode: str,
+                        o, sizes, t, top: int):
+    """Statically specialized fused scoring pass (the commit hot path).
+
+    One :func:`repro.core.ranking.make_substrate` pass, the policy's
+    epilogue over it, and the masked ascending victim order.  ``score_mode``
+    routes the eq.-16 policy through the fused Pallas kernel
+    (:func:`repro.kernels.ranking_score.ranking_victim_order`) or its jnp
+    oracle; every other policy scores via its epilogue (substrate fields
+    are lazy — only the ones the epilogue reads are ever computed).
+    """
+    sub = make_substrate(o, sizes, t, p)
+    if (top and _kernelable(policy, p, score_mode)
+            and score_mode in ("kernel", "kernel_interpret")):
+        from repro.kernels.ranking_score import ranking_victim_order
+        return ranking_victim_order(
+            sub.lam, sub.z_est, sub.resid, sizes, o.cached,
+            omega=p.omega, top=top,
+            interpret=(score_mode == "kernel_interpret"))
+    ranks = _kernel_row(policy, p, score_mode, sub, o, sizes)
+    if ranks is None:
+        ranks = policy.epilogue(sub, p)
+    if not top:
+        return (ranks, *_empty_order(0))
+    from repro.kernels.ref import victim_order_ref
+    idx, vals = victim_order_ref(ranks, o.cached, top)
+    return ranks, idx, vals
+
+
 def _behavior_static(policy: Policy, p: PolicyParams, score_mode: str,
-                     onehot: bool = False) -> _Behavior:
+                     onehot: bool = False,
+                     evict_top: int | None = None) -> _Behavior:
     return _Behavior(
-        score=lambda o, sizes, t: _score(policy, p, score_mode, o, sizes, t),
+        select=lambda o, sizes, t, top: _rank_select_static(
+            policy, p, score_mode, o, sizes, t, top),
         greedydual=policy.greedydual,
         gd_rate=policy.gd_cost == "agg_rate",
         adaptsize=policy.admission == "adaptsize",
         compare_admission=policy.compare_admission,
         split_key=policy.admission == "adaptsize",
-        onehot=onehot)
+        onehot=onehot,
+        evict_top=EVICT_TOP if evict_top is None else int(evict_top))
 
 
-def _behavior_multi(policy_names: tuple, policy_idx,
-                    p: PolicyParams) -> _Behavior:
-    """One lane of the unified multi-policy graph: every registered rank
-    function is evaluated (cheap — a few N-vector ops each) and the lane's
-    traced ``policy_idx`` gathers its row; behavior flags come from constant
-    lookup tables indexed the same way."""
+def _behavior_multi(policy_names: tuple, policy_idx, p: PolicyParams,
+                    score_mode: str = "rank",
+                    evict_top: int | None = None) -> _Behavior:
+    """One lane of the unified multi-policy graph.
+
+    The shared estimator substrate is computed ONCE per commit; every
+    registered policy's rank is then a few-op *epilogue* over it and the
+    lane's traced ``policy_idx`` gathers its row — O(N + P·N_cheap) per
+    commit instead of the historical P full rank stacks (DESIGN.md §10).
+    Behavior flags come from constant lookup tables indexed the same way.
+    ``score_mode`` routes the eq.-16 lane's row through the kernel family
+    (used by :func:`latency_improvement`; the sweep engine keeps 'rank')."""
     pols = [POLICIES[n] for n in policy_names]
     flag = lambda f: jnp.asarray(np.array([f(q) for q in pols]))[policy_idx]
 
-    def score(o, sizes, t):
-        return jnp.stack([q.rank(o, sizes, t, p) for q in pols])[policy_idx]
+    def row(q, sub, o, sizes):
+        r = _kernel_row(q, p, score_mode, sub, o, sizes)
+        return q.epilogue(sub, p) if r is None else r
+
+    def select(o, sizes, t, top):
+        sub = make_substrate(o, sizes, t, p)
+        ranks = jnp.stack([row(q, sub, o, sizes) for q in pols])[policy_idx]
+        if not top:
+            return (ranks, *_empty_order(0))
+        from repro.kernels.ref import victim_order_ref
+        idx, vals = victim_order_ref(ranks, o.cached, top)
+        return ranks, idx, vals
 
     return _Behavior(
-        score=score,
+        select=select,
         greedydual=flag(lambda q: q.greedydual),
         gd_rate=flag(lambda q: q.gd_cost == "agg_rate"),
         adaptsize=flag(lambda q: q.admission == "adaptsize"),
         compare_admission=flag(lambda q: q.compare_admission),
         split_key=True,
-        onehot=True)
+        onehot=True,
+        evict_top=EVICT_TOP if evict_top is None else int(evict_top))
 
 
 class SimResult(NamedTuple):
@@ -158,43 +266,36 @@ class SimResult(NamedTuple):
         return self.n_hits / jnp.maximum(self.n_requests, 1.0)
 
 
-def _gd_cost(b: _Behavior, o, sizes, p: PolicyParams):
-    """GreedyDual cost term (MAD-style aggregate-delay costs)."""
-    from .ranking import agg_mean_hat
-
-    cost = agg_mean_hat(o)
-    cost = _sel(b.gd_rate, cost * lambda_hat(o, p), cost)
-    return cost / jnp.maximum(sizes, _EPS)
-
-
-def _score(policy: Policy, p: PolicyParams, score_mode: str, o, sizes, t):
-    """Rank the whole object table at time ``t`` (the commit hot path)."""
-    if score_mode == "rank" or policy.rank is not rank_stochastic_vacdh \
-            or not isinstance(p.dist, Exponential):
-        # Kernel hard-codes Theorem-2 (Exponential) moments; everything else
-        # goes through the policy's jnp rank function.
-        return policy.rank(o, sizes, t, p)
-    lam = lambda_hat(o, p)
-    r = residual_hat(o, t, p)
-    if score_mode == "ref":
-        from repro.kernels.ref import ranking_scores_ref
-        ranks, _, _ = ranking_scores_ref(lam, o.z_est, r, sizes, o.cached,
-                                         p.omega)
-    else:
-        from repro.kernels.ranking_score import ranking_scores
-        ranks, _, _ = ranking_scores(
-            lam, o.z_est, r, sizes, o.cached, omega=p.omega,
-            interpret=(score_mode == "kernel_interpret"))
-    return ranks
+def _gd_cost_at(b: _Behavior, o, sizes, p: PolicyParams, j):
+    """GreedyDual cost term (MAD-style aggregate-delay costs) for object
+    ``j`` — a scalar gather chain, never an [N] vector (DESIGN.md §10;
+    elementwise ops on gathered elements are bit-identical to indexing the
+    historical full-table result)."""
+    cost = agg_mean_hat_at(o, j)
+    cost = _sel(b.gd_rate, cost * lambda_hat_at(o, p, j), cost)
+    return cost / jnp.maximum(sizes[j], _EPS)
 
 
 def _commit_one(b: _Behavior, p: PolicyParams, estimate_z: bool,
                 state: SimState, sizes: jax.Array) -> SimState:
-    """Commit the earliest completed outstanding fetch (admission+eviction)."""
+    """Commit the earliest completed outstanding fetch (admission+eviction).
+
+    Hot-path structure (DESIGN.md §10): the fused rank-and-select pass —
+    one substrate + epilogue scoring sweep plus the masked ascending victim
+    order — is ``lax.cond``-gated on the commit actually needing space, so
+    fit-without-eviction commits (and, under the traced AdaptSize coin,
+    rejected admissions) skip the whole O(N) scoring pass in unbatched
+    graphs.  The evict-until-fit loop then walks the precomputed order in
+    O(1) per victim (phase 1, up to ``b.evict_top`` victims) and only falls
+    back to the legacy per-eviction full-table argmin beyond that (phase 2
+    — a bitwise-identical continuation, since evicting only ever removes
+    entries from the masked table the order was computed over).
+    """
+    n = sizes.shape[0]
     o = state.obj
     done_t = jnp.where(o.in_flight, o.complete_t, jnp.inf)
     j = jnp.argmin(done_t)
-    jhot = jnp.arange(sizes.shape[0]) == j
+    jhot = (jnp.arange(n) == j) if b.onehot else None
     t_c = o.complete_t[j]
     realized = t_c - o.issue_t[j]
     ep = o.episode_delay[j]
@@ -223,28 +324,69 @@ def _commit_one(b: _Behavior, p: PolicyParams, estimate_z: bool,
     else:
         admit_ok = jnp.asarray(True)
 
-    # --- rank everything at the exact completion time --------------------
+    # --- GreedyDual H refresh at the exact completion time ---------------
     gd_clock = state.gd_clock
-    hj = gd_clock + _gd_cost(b, o, sizes, p)[j]
-    o = o._replace(gd_h=b.set_at(o.gd_h, j, jhot,
-                                 _sel(b.greedydual, hj, o.gd_h[j])))
-    ranks = b.score(o, sizes, t_c)
-    rank_j = ranks[j]
+    if not _static_false(b.greedydual):
+        hj = gd_clock + _gd_cost_at(b, o, sizes, p, j)
+        o = o._replace(gd_h=b.set_at(o.gd_h, j, jhot,
+                                     _sel(b.greedydual, hj, o.gd_h[j])))
     s_j = sizes[j]
+    top = min(b.evict_top, n)
+
+    # --- fused rank-and-select, gated on the commit needing space --------
+    def rank_select():
+        return b.select(o, sizes, t_c, top)
+
+    def skip_select():
+        return (jnp.zeros((n,), jnp.float32), *_empty_order(top))
+
+    ranks, order_idx, order_vals = jax.lax.cond(
+        admit_ok & (state.free < s_j), rank_select, skip_select)
+    rank_j = ranks[j]
+    cmp = _sel(b.compare_admission, rank_j, jnp.inf)
 
     # --- evict-until-fit (only victims ranked strictly below incomer) ----
-    def cond(carry):
+    # phase 1: walk the precomputed ascending victim order, O(1) each
+    def cond1(carry):
+        cached, free, clock, ok, nev, k = carry
+        return ok & (free < s_j) & (k < top)
+
+    def body1(carry):
+        cached, free, clock, ok, nev, k = carry
+        v = order_idx[k]
+        vv = order_vals[k]
+        can = vv < cmp
+        if b.onehot:
+            cached = jnp.where(can & (jnp.arange(n) == v), False, cached)
+        else:
+            cached = jnp.where(can, cached.at[v].set(False), cached)
+        free = jnp.where(can, free + sizes[v], free)
+        nev = jnp.where(can, nev + 1.0, nev)
+        clock = _sel(b.greedydual,
+                     jnp.where(can, jnp.maximum(clock, vv), clock), clock)
+        return cached, free, clock, can, nev, k + 1
+
+    if top:
+        cached, free, gd_clock, fit_ok, n_ev, _ = jax.lax.while_loop(
+            cond1, body1, (o.cached, state.free, gd_clock, admit_ok,
+                           state.n_evictions, jnp.int32(0)))
+    else:       # evict_top=0: the legacy graph — phase 2 does all the work
+        cached, free, fit_ok, n_ev = (o.cached, state.free, admit_ok,
+                                      state.n_evictions)
+
+    # phase 2: legacy per-eviction argmin — runs only when one admission
+    # needs more than ``top`` victims (rare; zero iterations otherwise)
+    def cond2(carry):
         cached, free, clock, ok, nev = carry
         return ok & (free < s_j)
 
-    def body(carry):
+    def body2(carry):
         cached, free, clock, ok, nev = carry
         vr = jnp.where(cached, ranks, jnp.inf)
         v = jnp.argmin(vr)
-        can = vr[v] < _sel(b.compare_admission, rank_j, jnp.inf)
+        can = vr[v] < cmp
         if b.onehot:
-            cached = jnp.where(can & (jnp.arange(sizes.shape[0]) == v),
-                               False, cached)
+            cached = jnp.where(can & (jnp.arange(n) == v), False, cached)
         else:
             cached = jnp.where(can, cached.at[v].set(False), cached)
         free = jnp.where(can, free + sizes[v], free)
@@ -254,7 +396,7 @@ def _commit_one(b: _Behavior, p: PolicyParams, estimate_z: bool,
         return cached, free, clock, can, nev
 
     cached, free, gd_clock, fit_ok, n_ev = jax.lax.while_loop(
-        cond, body, (o.cached, state.free, gd_clock, admit_ok, state.n_evictions))
+        cond2, body2, (cached, free, gd_clock, fit_ok, n_ev))
 
     do_admit = admit_ok & fit_ok & (free >= s_j)
     if b.onehot:
@@ -286,9 +428,15 @@ def _serve(b: _Behavior, p: PolicyParams, state: SimState,
 
     Returns ``(state, latency)``: the latency is also accumulated into the
     state's Kahan sum, but callers that feed one tier's resolution time into
-    another tier's fetch (the hierarchy, DESIGN.md §8) need it directly."""
+    another tier's fetch (the hierarchy, DESIGN.md §8) need it directly.
+
+    This path is O(1) per request in unbatched graphs — scalar gathers and
+    point scatters only; the GreedyDual upkeep (the one historical O(N)
+    full-table cost build) is a scalar gather chain and is folded out of
+    the graph entirely for statically non-GreedyDual policies
+    (DESIGN.md §10)."""
     o = state.obj
-    ihot = jnp.arange(sizes.shape[0]) == i
+    ihot = (jnp.arange(sizes.shape[0]) == i) if b.onehot else None
     is_hit = o.cached[i]
     is_delayed = o.in_flight[i]
     is_miss = ~(is_hit | is_delayed)
@@ -326,10 +474,11 @@ def _serve(b: _Behavior, p: PolicyParams, state: SimState,
         last_access=b.set_at(o.last_access, i, ihot, t),
         count=b.set_at(o.count, i, ihot, cnt + 1.0),
     )
-    hi = state.gd_clock + _gd_cost(b, o, sizes, p)[i]
-    o = o._replace(gd_h=b.set_at(
-        o.gd_h, i, ihot,
-        _sel(b.greedydual, jnp.where(is_hit, hi, o.gd_h[i]), o.gd_h[i])))
+    if not _static_false(b.greedydual):
+        hi = state.gd_clock + _gd_cost_at(b, o, sizes, p, i)
+        o = o._replace(gd_h=b.set_at(
+            o.gd_h, i, ihot,
+            _sel(b.greedydual, jnp.where(is_hit, hi, o.gd_h[i]), o.gd_h[i])))
 
     lat_sum, lat_comp = kahan_add(state.lat_sum, state.lat_comp, lat)
     state = state._replace(
@@ -387,17 +536,19 @@ def _run_chunk(b: _Behavior, params: PolicyParams, estimate_z: bool,
 
 @functools.partial(jax.jit,
                    static_argnames=("policy_name", "estimate_z",
-                                    "score_mode"),
+                                    "score_mode", "evict_top"),
                    donate_argnums=(0,))
 def _chunk_step_jit(state: SimState, times, objs, z_draw, valid, delta,
                     sizes, params: PolicyParams, policy_name: str,
-                    estimate_z: bool, score_mode: str) -> SimState:
+                    estimate_z: bool, score_mode: str,
+                    evict_top: int | None = None) -> SimState:
     """One donated-carry chunk dispatch: rebase the carried state's absolute
     times by ``delta`` (0.0 is a bitwise no-op), then scan the chunk.  The
     state argument is donated, so the per-object state occupies one set of
     device buffers for the whole streamed trace.  ``valid`` is ``None``
     (static: the select-free full-chunk graph) except on a padded tail."""
-    b = _behavior_static(POLICIES[policy_name], params, score_mode, False)
+    b = _behavior_static(POLICIES[policy_name], params, score_mode, False,
+                         evict_top)
     state = shift_times(state, delta)
     chunk = (times, objs, z_draw) if valid is None \
         else (times, objs, z_draw, valid)
@@ -414,7 +565,8 @@ def simulate_stream(stream: RequestStream, capacity: float,
                     params: PolicyParams | None = None, key=None,
                     estimate_z: bool = False, use_kernel=False,
                     chunk_size: int = 65536,
-                    rebase: bool = True) -> SimResult:
+                    rebase: bool = True,
+                    evict_top: int | None = None) -> SimResult:
     """Run one policy over a host-resident stream, one chunk at a time.
 
     Device residency is O(n_objects + chunk_size) regardless of trace
@@ -466,7 +618,7 @@ def simulate_stream(stream: RequestStream, capacity: float,
                                 jnp.asarray(chunk_i), jnp.asarray(chunk_z),
                                 valid,
                                 jnp.float32(new_base - base), sizes, params,
-                                policy, estimate_z, score_mode)
+                                policy, estimate_z, score_mode, evict_top)
         base = new_base
     return _result_of_state(state)
 
@@ -475,41 +627,45 @@ def simulate_chunked(trace: Trace, capacity: float,
                      policy: str = "stoch_vacdh",
                      params: PolicyParams | None = None, key=None,
                      estimate_z: bool = False, use_kernel=False,
-                     chunk_size: int = 65536) -> SimResult:
+                     chunk_size: int = 65536,
+                     evict_top: int | None = None) -> SimResult:
     """Chunked-carry :func:`simulate`: bitwise-identical results, O(chunk)
     trace residency.  Equivalent to ``simulate_stream(stream_of_trace(t),
     rebase=False)`` — the f64 widening round-trips every f32 time exactly
     (tests/test_streaming.py pins bitwise equality across chunk sizes)."""
     return simulate_stream(stream_of_trace(trace), capacity, policy, params,
                            key, estimate_z, use_kernel, chunk_size,
-                           rebase=False)
+                           rebase=False, evict_top=evict_top)
 
 
 def _simulate_impl(trace: Trace, capacity, key, policy_name: str,
                    params: PolicyParams, estimate_z: bool,
                    score_mode: str = "rank",
-                   onehot: bool = False) -> SimResult:
+                   onehot: bool = False,
+                   evict_top: int | None = None) -> SimResult:
     """Unjitted single-policy simulation body (statically specialized).
 
     ``onehot=True`` selects vmap-friendly state updates (set by the sweep
     engine when the graph is actually batched)."""
-    b = _behavior_static(POLICIES[policy_name], params, score_mode, onehot)
+    b = _behavior_static(POLICIES[policy_name], params, score_mode, onehot,
+                         evict_top)
     return _run_scan(b, trace, capacity, key, params, estimate_z)
 
 
 def _simulate_multi_impl(trace: Trace, capacity, key, policy_idx,
                          params: PolicyParams, policy_names: tuple,
-                         estimate_z: bool) -> SimResult:
+                         estimate_z: bool,
+                         score_mode: str = "rank") -> SimResult:
     """Unjitted multi-policy body: the policy is a traced lane index, so one
     compiled graph serves a whole policies x hyperparameter grid
     (:mod:`repro.core.sweep`)."""
-    b = _behavior_multi(policy_names, policy_idx, params)
+    b = _behavior_multi(policy_names, policy_idx, params, score_mode)
     return _run_scan(b, trace, capacity, key, params, estimate_z)
 
 
 _simulate = jax.jit(_simulate_impl,
                     static_argnames=("policy_name", "estimate_z",
-                                     "score_mode"))
+                                     "score_mode", "evict_top"))
 
 
 def resolve_score_mode(use_kernel) -> str:
@@ -531,25 +687,64 @@ def resolve_score_mode(use_kernel) -> str:
 
 def simulate(trace: Trace, capacity: float, policy: str = "stoch_vacdh",
              params: PolicyParams | None = None, key=None,
-             estimate_z: bool = False, use_kernel=False) -> SimResult:
+             estimate_z: bool = False, use_kernel=False,
+             evict_top: int | None = None) -> SimResult:
     """Run one policy over a trace.
 
     ``params`` rides through jit as a pytree (numeric fields traced — omega /
     window / distribution-parameter sweeps don't retrace).  ``use_kernel``
     routes the commit-time scoring pass through the fused Pallas kernel for
-    the eq.-16 policy (see :func:`resolve_score_mode`)."""
+    the eq.-16 policy (see :func:`resolve_score_mode`).  ``evict_top``
+    overrides the precomputed victim-order length (:data:`EVICT_TOP`; 0 =
+    the legacy per-eviction argmin graph — results are bitwise identical
+    for every setting, tests/test_hotpath.py)."""
     if params is None:
         params = PolicyParams()
     if key is None:
         key = jax.random.key(0)
     return _simulate(trace, jnp.float32(capacity), key, policy, params,
-                     estimate_z, resolve_score_mode(use_kernel))
+                     estimate_z, resolve_score_mode(use_kernel),
+                     evict_top=evict_top)
+
+
+@functools.partial(jax.jit, static_argnames=("policy_names", "estimate_z",
+                                             "score_mode"))
+def _improvement_pair(trace: Trace, capacity, key, params: PolicyParams,
+                      policy_names: tuple, estimate_z: bool,
+                      score_mode: str) -> SimResult:
+    """Policy and baseline as two lanes of ONE compiled unified graph."""
+    def lane(li):
+        return _simulate_multi_impl(trace, capacity, key, li, params,
+                                    policy_names, estimate_z, score_mode)
+
+    return jax.vmap(lane)(jnp.arange(len(policy_names)))
 
 
 def latency_improvement(trace: Trace, capacity: float, policy: str,
                         baseline: str = "lru",
-                        params: PolicyParams | None = None) -> jax.Array:
-    """Paper eq. 17: (Latency(LRU) - Latency(A)) / Latency(LRU)."""
-    la = simulate(trace, capacity, policy, params).total_latency
-    lb = simulate(trace, capacity, baseline, params).total_latency
+                        params: PolicyParams | None = None, key=None,
+                        estimate_z: bool = False,
+                        use_kernel=False) -> jax.Array:
+    """Paper eq. 17: (Latency(LRU) - Latency(A)) / Latency(LRU).
+
+    The policy and the baseline run as two lanes of one compiled
+    multi-policy graph (shared substrate + two epilogues) instead of two
+    independent ``simulate`` dispatches — one trace, one compile, and on
+    batched backends one fused dispatch.  Per-lane arithmetic is bitwise
+    identical to the per-policy ``simulate`` calls (the sweep engine's
+    lane contract, tests/test_sweep.py).  ``key`` seeds both lanes (the
+    AdaptSize admission coin stream); ``use_kernel`` routes an eq.-16 lane
+    through the fused kernel family."""
+    if params is None:
+        params = PolicyParams()
+    if key is None:
+        key = jax.random.key(0)
+    for name in (policy, baseline):
+        if name not in POLICIES:
+            raise ValueError(f"unknown policy {name!r}; known: "
+                             f"{sorted(POLICIES)}")
+    res = _improvement_pair(trace, jnp.float32(capacity), key, params,
+                            (policy, baseline), estimate_z,
+                            resolve_score_mode(use_kernel))
+    la, lb = res.total_latency[0], res.total_latency[1]
     return (lb - la) / lb

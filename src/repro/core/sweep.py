@@ -12,11 +12,14 @@ through ONE jit-compiled call.  Two mechanisms make that possible:
   residual-estimator switch) are pytree *leaves* of ``PolicyParams``, so a
   stacked params grid vmaps without retracing;
 * the policy itself becomes a traced lane index: the unified simulation
-  body (``_simulate_multi_impl``) evaluates every requested rank function
-  (a few N-vector ops each) and gathers the lane's row, with behavior flags
-  (GreedyDual upkeep, AdaptSize admission, rank-compare eviction) selected
-  from constant tables.  XLA sees one graph for the whole policy set — the
-  per-policy compile that dominated benchmark wall-clock happens once.
+  body (``_simulate_multi_impl``) computes ONE shared estimator substrate
+  per commit and evaluates every requested policy as a few-op epilogue over
+  it, gathering the lane's row (O(N + P·N_cheap) — the historical
+  per-lane full rank stacks were the §Perf "lockstep union penalty";
+  DESIGN.md §10), with behavior flags (GreedyDual upkeep, AdaptSize
+  admission, rank-compare eviction) selected from constant tables.  XLA
+  sees one graph for the whole policy set — the per-policy compile that
+  dominated benchmark wall-clock happens once.
 
 Per-lane arithmetic is untouched: a swept point is bit-for-bit identical to
 the corresponding :func:`repro.core.simulator.simulate` call (asserted by

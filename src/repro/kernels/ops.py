@@ -11,10 +11,11 @@ from __future__ import annotations
 from .decode_attention import decode_attention
 from .flash_attention import flash_attention
 from .gla_chunk import gla_chunk
-from .ranking_score import ranking_scores
+from .ranking_score import ranking_scores, ranking_victim_order
 
 __all__ = ["flash_attention", "decode_attention", "gla_chunk",
-           "gla_chunk_kernel_apply", "ranking_scores"]
+           "gla_chunk_kernel_apply", "ranking_scores",
+           "ranking_victim_order"]
 
 
 def gla_chunk_kernel_apply(q, k, v, log_f, log_i, *, chunk: int = 256,

@@ -84,3 +84,103 @@ def ranking_scores(lam, z, resid, sizes, cached, *, omega=1.0,
 
     ib = jnp.argmin(bmin)
     return f[:n], barg[ib], bmin[ib]
+
+
+def _rank_select_kernel(om_ref, lam_ref, z_ref, r_ref, s_ref, c_ref, f_ref,
+                        bvals_ref, bidx_ref, *, block: int, top: int):
+    """Eq.-16 scores + block-local top-``top`` ascending victim candidates,
+    one VMEM-resident pass.  The top-E extraction is ``top`` unrolled
+    masked-argmin rounds over the block (top is small and static), so the
+    five input streams are still read exactly once per element."""
+    ib = pl.program_id(0)
+    omega = om_ref[0]
+    lam = lam_ref[...]
+    z = z_ref[...]
+    z2 = z * z
+    e = z + lam * z2
+    var = z2 + 6.0 * lam * z2 * z + 5.0 * lam * lam * z2 * z2
+    f = (e + omega * jnp.sqrt(var)) / (
+        jnp.maximum(r_ref[...], 1e-6) * jnp.maximum(s_ref[...], 1e-6))
+    f_ref[...] = f
+    masked = jnp.where(c_ref[...] != 0, f, INF)
+    lanes = jnp.arange(block)
+    for e_i in range(top):
+        idx = jnp.argmin(masked)
+        bvals_ref[0, e_i] = masked[idx]
+        bidx_ref[0, e_i] = idx.astype(jnp.int32) + ib * block
+        masked = jnp.where(lanes == idx, INF, masked)
+
+
+@functools.partial(jax.jit, static_argnames=("top", "block", "interpret"))
+def ranking_victim_order(lam, z, resid, sizes, cached, *, omega=1.0,
+                         top: int = 8, block: int = 1024,
+                         interpret: bool = True):
+    """Fused rank-and-select: eq. 16 scores AND the masked top-``top``
+    ascending victim order in one streaming pass (DESIGN.md §10).
+
+    All inputs (N,); returns ``(scores (N,), idx (top,), vals (top,))``
+    where ``idx``/``vals`` list the ``top`` lowest-ranked cached objects in
+    ascending ``(score, index)`` order — the same sequence as
+    :func:`repro.kernels.ref.victim_order_ref`.  Block-local candidates are
+    extracted in-kernel (one HBM read for score + mask + select, vs the
+    score-then-sort round trip of the unfused path) and merged host-side
+    with a tiny ``top_k`` over ``grid * top`` survivors; candidate values
+    at or above the finite in-kernel ``INF`` sentinel are converted to
+    exact ``+inf`` (scores above 3.4e38 are treated as +inf, the kernel
+    family's pre-existing convention).  A block with fewer cached entries
+    than ``top`` keeps emitting sentinel-valued candidates (whose lane
+    index is meaningless), so the +inf conversion must key on the
+    *candidate value*, never re-derive it from the index — an index-based
+    re-mask would resurrect finite scores for already-emitted victims and
+    break the consumer's evict-until-fit accounting.  The global
+    top-``top`` is always contained in the union of block-local
+    top-``top``s, and both levels break ties toward lower indices, so the
+    merged order matches the jnp oracle wherever values are finite (+inf
+    tail positions may carry different — meaningless — indices).
+    """
+    n = lam.shape[0]
+    top = max(1, min(top, n))
+    block = min(block, max(128, n))
+    if top > block:
+        # a single block could then hold more of the global top than it can
+        # emit, breaking the union-containment argument above
+        raise ValueError(f"top={top} must be <= block={block}")
+    pad = (-n) % block
+    if pad:
+        ext = lambda x, v: jnp.pad(x, (0, pad), constant_values=v)
+        lam, z = ext(lam, 0), ext(z, 0)
+        resid, sizes = ext(resid, 1), ext(sizes, 1)
+        cached = ext(cached.astype(jnp.int32), 0)
+    else:
+        cached = cached.astype(jnp.int32)
+    npad = n + pad
+    grid = (npad // block,)
+    ktop = min(top, block)
+    om = jnp.asarray(omega, jnp.float32).reshape(1)
+
+    f, bvals, bidx = pl.pallas_call(
+        functools.partial(_rank_select_kernel, block=block, top=ktop),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,))] +
+                 [pl.BlockSpec((block,), lambda i: (i,))] * 5,
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1, ktop), lambda i: (i, 0)),
+            pl.BlockSpec((1, ktop), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad,), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0], ktop), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0], ktop), jnp.int32),
+        ],
+        interpret=interpret,
+    )(om, lam.astype(jnp.float32), z.astype(jnp.float32),
+      resid.astype(jnp.float32), sizes.astype(jnp.float32), cached)
+
+    # merge: candidate arrays are ordered (block, extraction rank), which for
+    # equal values coincides with global index order — top_k's positional
+    # tie-break therefore reproduces the argmin convention across blocks.
+    neg, pos = jax.lax.top_k(-bvals.reshape(-1), top)
+    idx = bidx.reshape(-1)[pos]
+    vals = jnp.where(-neg >= INF, jnp.inf, -neg)
+    return f[:n], idx, vals

@@ -81,3 +81,21 @@ def ranking_scores_ref(lam, z, resid, sizes, cached, omega: float):
     masked = jnp.where(cached, f, jnp.inf)
     idx = jnp.argmin(masked)
     return f, idx, masked[idx]
+
+
+def victim_order_ref(scores, cached, top: int):
+    """Masked ascending victim order — the eviction loop's precomputed diet.
+
+    Returns ``(idx, vals)``, the indices and masked scores of the ``top``
+    lowest-ranked *cached* objects in ascending ``(score, index)`` order —
+    exactly the sequence an evict-until-fit loop that re-runs a masked
+    argmin after every eviction would visit, because evicting only ever
+    removes entries (DESIGN.md §10).  Non-cached entries are masked to
+    +inf, so once the real victims run out the sequence continues with
+    ``inf`` sentinels and any rank-compare admission check fails closed.
+    ``lax.top_k`` breaks ties in favor of lower indices, matching
+    ``argmin``'s first-minimum convention bit-for-bit.
+    """
+    masked = jnp.where(cached, scores, jnp.inf)
+    neg, idx = jax.lax.top_k(-masked, top)
+    return idx, -neg

@@ -1,0 +1,223 @@
+"""Hot-path overhaul parity suite (DESIGN.md §10).
+
+The overhauled commit/serve path — shared-substrate scoring, scalar
+serve-path gathers, fused rank-and-select eviction — must be **bitwise
+identical** to the pre-overhaul graphs.  The pre-overhaul eviction loop is
+kept in-tree as ``evict_top=0`` (pure per-eviction argmin; phase 1
+disabled), so the pin is direct: for every registered policy, every seed,
+and every chunk size, ``evict_top`` must be invisible in the results; the
+degenerate hierarchy and the unified-vs-per-policy sweep lanes must agree
+the same way.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (PolicyParams, Trace, latency_improvement,
+                        make_hier_trace, simulate, simulate_chunked,
+                        simulate_hier, sweep_grid)
+from repro.core.ranking import POLICIES
+from repro.core.refsim import simulate_ref
+from repro.data.traces import SyntheticSpec, synthetic_trace
+
+ALL_POLICIES = sorted(POLICIES)
+
+SPEC = SyntheticSpec(n_objects=24, n_requests=600, rate=300.0,
+                     size_min=1.0, size_max=20.0,
+                     latency_base=0.01, latency_per_mb=1e-3,
+                     stochastic=True)
+
+
+def _trace(seed=0):
+    return synthetic_trace(jax.random.key(seed), SPEC)
+
+
+def _assert_same(a, b, msg=""):
+    for fa, fb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# fused rank-and-select vs the legacy argmin loop, every registered policy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_fused_eviction_bitwise_matches_legacy(policy):
+    trace = _trace()
+    fused = simulate(trace, 60.0, policy, estimate_z=True)
+    legacy = simulate(trace, 60.0, policy, estimate_z=True, evict_top=0)
+    _assert_same(fused, legacy, policy)
+    assert int(fused.n_evictions) > 0      # the loop actually ran
+
+
+@pytest.mark.parametrize("policy", ["stoch_vacdh", "lru_mad", "adaptsize"])
+@pytest.mark.parametrize("evict_top", [1, 2, 32])
+def test_victim_order_length_is_invisible(policy, evict_top):
+    """Any order length — shorter and longer than the typical eviction run
+    — must fall through phase 1/phase 2 to identical results (covers the
+    GreedyDual clock update and the admission-coin stream)."""
+    trace = _trace(seed=3)
+    a = simulate(trace, 60.0, policy, evict_top=evict_top)
+    b = simulate(trace, 60.0, policy, evict_top=0)
+    _assert_same(a, b, f"{policy}/top={evict_top}")
+
+
+def test_phase2_fallback_beyond_order_length():
+    """One admission that must evict MORE victims than ``evict_top``
+    pre-orders: a big object displacing many unit-size residents exercises
+    the phase-1 -> phase-2 handoff inside a single commit."""
+    n = 24
+    # unit objects 1..23 fill the cache, then the big object 0 arrives; a
+    # final request at t=26 flushes its lazy commit (t=24.25) into view
+    times = np.concatenate([np.arange(1, n + 1), [26.0]]).astype(np.float32)
+    objs = np.concatenate([np.arange(1, n), [0, 1]]).astype(np.int32)
+    sizes = np.ones(n, np.float32)
+    sizes[0] = 18.0                       # the late big object
+    z_mean = np.full(n, 0.25, np.float32)
+    z_draw = np.full(n + 1, 0.25, np.float32)
+    trace = Trace(jnp.asarray(times), jnp.asarray(objs), jnp.asarray(sizes),
+                  jnp.asarray(z_mean), jnp.asarray(z_draw))
+    # lru always-admits (cmp = inf), so committing object 0 must evict 18
+    # unit residents > default evict_top=8 -> phase 2 runs
+    a = simulate(trace, 20.0, "lru", evict_top=4)
+    b = simulate(trace, 20.0, "lru", evict_top=0)
+    c = simulate(trace, 20.0, "lru")
+    _assert_same(a, b)
+    _assert_same(a, c)
+    assert int(a.n_evictions) >= 18
+    ref = simulate_ref(trace, 20.0, "lru")
+    assert int(a.n_evictions) == ref["n_evictions"]
+    assert int(a.n_hits) == ref["n_hits"]
+
+
+# ---------------------------------------------------------------------------
+# chunked streaming over the overhauled scan: policies x seeds x chunk sizes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@pytest.mark.parametrize("chunk_size", [7, 600])
+def test_chunked_overhauled_scan_all_policies(policy, chunk_size):
+    trace = _trace(seed=1)
+    base = simulate(trace, 60.0, policy)
+    got = simulate_chunked(trace, 60.0, policy, chunk_size=chunk_size)
+    _assert_same(base, got, f"{policy}/chunk={chunk_size}")
+
+
+@pytest.mark.parametrize("seed", [0, 2])
+def test_seed_axis_parity_adaptsize(seed):
+    """The admission-coin stream (the one seed-sensitive policy) must be
+    chunking- and order-length-invariant per seed."""
+    trace = _trace(seed=2)
+    key = jax.random.key(seed)
+    base = simulate(trace, 60.0, "adaptsize", key=key)
+    _assert_same(base, simulate(trace, 60.0, "adaptsize", key=key,
+                                evict_top=0))
+    _assert_same(base, simulate_chunked(trace, 60.0, "adaptsize", key=key,
+                                        chunk_size=101))
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_kernel_scored_sparse_cache_matches_rank_path(backend):
+    """Tiny capacity => fewer cached objects than ``evict_top`` during
+    eviction-needing commits: the fused kernel's exhausted extraction
+    rounds must surface as +inf, not as resurrected finite duplicates
+    (which would double-free victim sizes — regression for the merge
+    re-mask bug)."""
+    trace = _trace(seed=6)
+    for cap in (5.0, 12.0):
+        base = simulate(trace, cap, "stoch_vacdh")
+        got = simulate(trace, cap, "stoch_vacdh", use_kernel=backend)
+        assert int(got.n_evictions) == int(base.n_evictions)
+        assert int(got.n_hits) == int(base.n_hits)
+        np.testing.assert_allclose(float(got.total_latency),
+                                   float(base.total_latency), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# degenerate hierarchy + sweep lanes ride the same overhauled core
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["stoch_vacdh", "lru_mad"])
+def test_degenerate_hierarchy_bitwise_single_tier(policy):
+    """1 shard, empty L2, zero hop == single-tier simulate, through the
+    overhauled commit/serve core (the GD lane covers the scalar
+    _gd_cost_at path under the hierarchy's one-hot writes)."""
+    trace = _trace(seed=4)
+    ht = make_hier_trace(trace, 1, hop_mean=0.0)
+    hr = simulate_hier(ht, 1, 100.0, 0.0, policy, estimate_z=True)
+    sr = simulate(trace, 100.0, policy, estimate_z=True)
+    assert float(hr.total_latency) == float(sr.total_latency)
+    for f in ("n_hits", "n_delayed", "n_misses", "n_evictions"):
+        assert int(getattr(hr.per_shard, f)[0]) == int(getattr(sr, f)), f
+
+
+def test_latency_improvement_lanes_bitwise_match_simulate():
+    """The rewritten eq.-17 helper runs policy+baseline as two lanes of one
+    compiled graph; each lane must equal the per-policy simulate bitwise
+    (keyed lanes included — the adaptsize coin stream), and the ratio must
+    be the f32 two-dispatch computation."""
+    from repro.core.simulator import _improvement_pair
+    trace = _trace(seed=7)
+    key = jax.random.key(3)
+    names = ("stoch_vacdh", "adaptsize")
+    res = _improvement_pair(trace, jnp.float32(60.0), key, PolicyParams(),
+                            names, False, "rank")
+    for li, pol in enumerate(names):
+        ref = simulate(trace, 60.0, pol, key=key)
+        assert float(res.total_latency[li]) == float(ref.total_latency), pol
+        assert int(res.n_evictions[li]) == int(ref.n_evictions), pol
+    impr = latency_improvement(trace, 60.0, "stoch_vacdh", "lru")
+    la = simulate(trace, 60.0, "stoch_vacdh").total_latency
+    lb = simulate(trace, 60.0, "lru").total_latency
+    assert float(impr) == float((lb - la) / lb)
+
+
+def test_unified_lanes_bitwise_match_per_policy_lanes():
+    """The unified multi-policy graph (one substrate + P epilogues) vs the
+    statically specialized per-policy graphs, as sweep lanes — the exact
+    comparison the §Perf 'lockstep union penalty' measurement runs."""
+    trace = _trace(seed=5)
+    names = ["lru", "lhd", "lac", "stoch_vacdh", "lru_mad", "lhd_mad",
+             "adaptsize"]
+    params = [PolicyParams(omega=1.0)]
+    multi = sweep_grid(trace, 60.0, names, params, seeds=(0,))
+    for li, pol in enumerate(names):
+        single = sweep_grid(trace, 60.0, pol, params, seeds=(0,))
+        for fm, fs in zip(multi.result, single.result):
+            np.testing.assert_array_equal(np.asarray(fm[:, li]),
+                                          np.asarray(fs[:, 0]), err_msg=pol)
+
+
+# ---------------------------------------------------------------------------
+# property-based: evict_top x chunking transparency on random workloads
+# ---------------------------------------------------------------------------
+def test_evict_order_property_based():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def case(draw):
+        n_obj = draw(st.integers(2, 10))
+        n_req = draw(st.integers(20, 100))
+        seed = draw(st.integers(0, 2 ** 16))
+        k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+        times = jnp.cumsum(jax.random.exponential(k1, (n_req,)) * 0.01)
+        objs = jax.random.randint(k2, (n_req,), 0, n_obj)
+        sizes = jax.random.uniform(k3, (n_obj,), minval=1.0, maxval=5.0)
+        z_mean = jnp.full((n_obj,), 0.05)
+        z_draw = z_mean[objs] * jax.random.exponential(k3, (n_req,))
+        trace = Trace(times, objs.astype(jnp.int32), sizes, z_mean, z_draw)
+        policy = draw(st.sampled_from(["lru", "stoch_vacdh", "lhd_mad"]))
+        cap = draw(st.floats(2.0, 20.0))
+        top = draw(st.sampled_from([1, 3, 8]))
+        return trace, policy, cap, top
+
+    @given(case=case())
+    @settings(deadline=None, max_examples=10)
+    def prop(case):
+        trace, policy, cap, top = case
+        base = simulate(trace, cap, policy, evict_top=0)
+        _assert_same(base, simulate(trace, cap, policy, evict_top=top))
+        _assert_same(base, simulate_chunked(trace, cap, policy,
+                                            chunk_size=17))
+
+    prop()

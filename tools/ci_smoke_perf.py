@@ -1,0 +1,87 @@
+"""CI long-trace smoke throughput recorder + floor check.
+
+Runs a 100k-request generated-realistic trace through the streaming chunked
+engine (the same workload as the ``slow``-marked smoke test), writes the
+measured wall-clock / req/s / peak RSS to a JSON artifact, and exits
+non-zero if throughput falls below a *generous* floor — a hot-path
+regression canary, not a benchmark: shared CI runners are noisy, so the
+floor is set ~10x below the 2-vCPU dev-container measurement
+(EXPERIMENTS.md §Perf iteration 5).  Override the floor / output path via
+``--floor`` / ``--out`` (``--floor 0`` records without asserting).
+
+Usage: PYTHONPATH=src python tools/ci_smoke_perf.py [--floor REQ_S]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import resource
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+DEFAULT_FLOOR = 2_000        # req/s; dev-container measures >20k
+N_REQUESTS = 100_000
+CHUNK_SIZE = 16_384
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--floor", type=float, default=DEFAULT_FLOOR,
+                    help="minimum acceptable req/s (0 disables the assert)")
+    ap.add_argument("--out", default="smoke_perf.json",
+                    help="JSON artifact path")
+    ap.add_argument("--policy", default="stoch_vacdh")
+    args = ap.parse_args()
+
+    from benchmarks.common import write_bench_json
+    from repro.core import PolicyParams, simulate_stream
+    from repro.data.traces import (RealWorldSpec, compact_requests,
+                                   realworld_raw)
+
+    t0 = time.perf_counter()
+    raw = realworld_raw(RealWorldSpec(n_requests=N_REQUESTS, n_keys=20_000,
+                                      start_time=1.7e9))
+    stream, stats = compact_requests(raw, top_k=2000, n_recycle=128)
+    gen_s = time.perf_counter() - t0
+
+    # first replay pays compile; the timed replay measures the hot path
+    simulate_stream(stream, 500.0, args.policy, PolicyParams(omega=1.0),
+                    estimate_z=True, chunk_size=CHUNK_SIZE)
+    t0 = time.perf_counter()
+    r = simulate_stream(stream, 500.0, args.policy, PolicyParams(omega=1.0),
+                        estimate_z=True, chunk_size=CHUNK_SIZE)
+    float(r.total_latency)
+    wall = time.perf_counter() - t0
+    req_s = N_REQUESTS / wall
+
+    # same schema/stamping as the BENCH_*.json trajectory files
+    path = write_bench_json("smoke_perf.json", dict(
+        benchmark="ci_long_trace_smoke",
+        policy=args.policy,
+        n_requests=N_REQUESTS,
+        n_objects=stats.n_objects,
+        chunk_size=CHUNK_SIZE,
+        gen_s=round(gen_s, 2),
+        sim_wall_s=round(wall, 2),
+        req_per_s=int(req_s),
+        floor_req_per_s=int(args.floor),
+        peak_rss_mb=round(
+            resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0, 1),
+        hit_ratio=round(float(r.hit_ratio), 4),
+    ), path=args.out)
+    print(json.dumps(json.loads(path.read_text()), indent=2))
+
+    if args.floor and req_s < args.floor:
+        print(f"FAIL: {req_s:.0f} req/s below the {args.floor:.0f} req/s "
+              f"floor — hot-path regression (or an unusually starved "
+              f"runner; re-run to confirm)", file=sys.stderr)
+        return 1
+    print(f"OK: {req_s:.0f} req/s >= {args.floor:.0f} req/s floor")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
