@@ -81,9 +81,10 @@ def run(full: bool = False) -> list[dict]:
 
     # --- large-N roster: the fig2/fig5 regime ----------------------------
     # the substrate split removed the rank-stack term of the lockstep
-    # penalty, but at large N the unified graph's one-hot serve-path writes
-    # (O(N) selects per request vs the static graphs' O(1) scatters) still
-    # dominate — this section keeps that regime honest in the trajectory
+    # penalty and the lane-scatter lowering the serve-write term; what
+    # remains is the lockstep-union commit scoring (DESIGN.md §11) — this
+    # section keeps that regime honest in the trajectory (the N=3000
+    # canary row)
     nspec = SyntheticSpec(n_objects=3000, n_requests=n_req, rate=2000.0,
                           latency_base=0.02, latency_per_mb=5e-4,
                           stochastic=True)
@@ -96,8 +97,11 @@ def run(full: bool = False) -> list[dict]:
         return [sweep_grid(ntrace, 1500.0, pol, [params]).result
                 for pol in names]
 
-    un_first, un_warm, un_min = _timed(unified_n, iters=1)
-    sn_first, sn_warm, sn_min = _timed(sequential_n, iters=1)
+    # 2 warm iters (not the default 3): the N=3000 graphs are the slowest
+    # rows, and warm_min_s is what the summary/canary reads — one sample
+    # was measured ±30% noisy on the 2-vCPU container
+    un_first, un_warm, un_min = _timed(unified_n, iters=2)
+    sn_first, sn_warm, sn_min = _timed(sequential_n, iters=2)
     sims = len(names) * n_req
     rows += [
         dict(name="roster3000_unified", mode="one multi-policy call",
@@ -134,20 +138,22 @@ def run(full: bool = False) -> list[dict]:
              req_per_s=int(sims / p_warm)),
     ]
 
+    summary = dict(
+        roster_unified_over_sequential=round(
+            rows[1]["warm_s"] / max(rows[0]["warm_s"], 1e-9), 3),
+        roster3000_unified_over_sequential=round(
+            rows[3]["warm_s"] / max(rows[2]["warm_s"], 1e-9), 3),
+        omega_batched_over_sequential=round(
+            rows[5]["warm_s"] / max(rows[4]["warm_s"], 1e-9), 3))
     write_bench_json("BENCH_sweep.json", dict(
         benchmark="bench_sweep",
         workload=dict(n_objects=spec.n_objects, n_objects_large=3000,
                       n_requests=n_req, capacity=cap, roster=names,
                       omegas=list(omegas)),
         rows=rows,
-        summary=dict(
-            roster_unified_over_sequential=round(
-                rows[1]["warm_s"] / max(rows[0]["warm_s"], 1e-9), 3),
-            roster3000_unified_over_sequential=round(
-                rows[3]["warm_s"] / max(rows[2]["warm_s"], 1e-9), 3),
-            omega_batched_over_sequential=round(
-                rows[5]["warm_s"] / max(rows[4]["warm_s"], 1e-9), 3)),
-    ))
+        summary=summary,
+    ), headline=dict(**summary,
+                     roster3000_unified_req_per_s=rows[2]["req_per_s"]))
     return rows
 
 

@@ -16,8 +16,45 @@ POLICY_SET = ["lru", "lfu", "lhd", "adaptsize", "lru_mad", "lhd_mad",
               "lac", "cala", "vacdh", "lrb_lite", "stoch_vacdh"]
 
 
+def _git_sha() -> str:
+    """Short HEAD sha, suffixed '-dirty' when the working tree differs —
+    a history entry must never attribute uncommitted code's numbers to a
+    clean commit."""
+    import subprocess
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+        porcelain = subprocess.run(
+            ["git", "status", "--porcelain"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip()
+        return f"{sha}-dirty" if porcelain else sha
+    except Exception:
+        return "unknown"
+
+
+def _backfill_headline(old: dict) -> dict:
+    """Synthesize a history entry's headline from a pre-history payload, so
+    the first history-aware write preserves the prior PR's point instead of
+    overwriting it (the PR-4 backfill)."""
+    if old.get("benchmark") == "fig_realworld_stream":
+        agg = old.get("aggregate", {})
+        dev = old.get("device_mode") or [{}]
+        return {k: v for k, v in dict(
+            mean_req_per_s=agg.get("mean_req_per_s"),
+            peak_rss_mb=agg.get("peak_rss_mb"),
+            device_req_per_s=dev[0].get("req_per_s")).items()
+            if v is not None}
+    if old.get("benchmark") == "bench_sweep":
+        return dict(old.get("summary", {}))
+    return {}
+
+
 def write_bench_json(filename: str, payload: dict,
-                     path: Path | str | None = None) -> Path:
+                     path: Path | str | None = None,
+                     headline: dict | None = None) -> Path:
     """Write a machine-readable perf-trajectory snapshot at the repo root
     (or at ``path`` — CI's smoke artifact reuses the same schema).
 
@@ -26,7 +63,16 @@ def write_bench_json(filename: str, payload: dict,
     of re-reading EXPERIMENTS prose.  The environment fields make cross-PR
     numbers interpretable (a TPU row and a 2-vCPU row are different
     experiments, not a regression) — one stamping function so every
-    artifact shares one schema."""
+    artifact shares one schema.
+
+    ``headline`` (a small dict of the run's defining numbers) turns the
+    snapshot into a *trajectory*: the file's ``history`` list is carried
+    forward across writes and the current run is appended as
+    ``{sha, date_utc, **headline}`` — so the full-detail ``rows`` always
+    describe the latest run while ``history`` accrues one headline per
+    measurement across PRs.  A pre-history file on disk contributes a
+    backfilled first entry (sha 'pre-history') derived from its own
+    payload, so no recorded point is ever dropped."""
     import json
     import os
     import platform
@@ -41,6 +87,22 @@ def write_bench_json(filename: str, payload: dict,
         "generated_utc",
         datetime.now(timezone.utc).isoformat(timespec="seconds"))
     path = Path(path) if path is not None else REPO_ROOT / filename
+    if headline is not None:
+        history = []
+        try:
+            old = json.loads(path.read_text())
+            history = list(old.get("history", []))
+            if not history:
+                back = _backfill_headline(old)
+                if back:
+                    history.append(dict(
+                        sha="pre-history",
+                        date_utc=old.get("generated_utc"), **back))
+        except (OSError, ValueError):
+            pass
+        history.append(dict(sha=_git_sha(),
+                            date_utc=payload["generated_utc"], **headline))
+        payload["history"] = history
     path.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {path}")
     return path
@@ -155,8 +217,8 @@ def sweep_improvement_table(traces, capacities, policies, params=None,
     sweeps over different policy subsets reuse one compiled graph (rows are
     only emitted for ``policies``).  ``lane_bucket`` applies to the unified
     path only: per-policy grids within one call already share a shape, and
-    padding them would also flip small grids onto the batched (one-hot)
-    update path — a net loss at large N.
+    padding them would also flip small grids onto a batched update
+    lowering (DESIGN.md §11) — a net loss at large N.
     """
     from repro.core import PolicyParams, SimResult, sweep_grid
     from repro.core.trace import Trace

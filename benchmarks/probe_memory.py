@@ -1,14 +1,18 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 """Memory forensics for a dry-run cell: compile a layer-reduced variant and
-dump the largest HLO buffers (by result shape) + temp scaling vs n_layers."""
+dump the largest HLO buffers (by result shape) + temp scaling vs n_layers.
+
+Needs a 512-device host platform, so ``XLA_FLAGS`` must be set BEFORE jax
+initializes — :func:`main` sets it, and ``benchmarks/run.py`` therefore
+invokes this probe as a *subprocess* (``--only memory``): importing it into
+an already-initialized jax process would either clobber the caller's
+backend or find too few devices.  Importing this module is side-effect
+free."""
 import argparse
 import dataclasses
+import os
 import re
 import sys
 from collections import Counter
-
-import jax
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -40,13 +44,24 @@ def _size_of(s):
     return el * _BYTES.get(dt, 4)
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="grok-1-314b")
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--layers", type=int, nargs="+", default=[2, 4])
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
+
+    # the probe is unusable without the 512-device host platform: keep any
+    # unrelated pre-existing XLA_FLAGS, but replace a conflicting
+    # device-count setting outright (a stale count would surface much
+    # later as a confusing mesh-shape error)
+    flag = "--xla_force_host_platform_device_count=512"
+    prior = os.environ.get("XLA_FLAGS", "")
+    kept = [f for f in prior.split()
+            if "xla_force_host_platform_device_count" not in f]
+    os.environ["XLA_FLAGS"] = " ".join(kept + [flag])
+    import jax
 
     from repro.configs import registry
     from repro.launch.cells import input_specs

@@ -28,13 +28,23 @@ def _enable_compile_cache() -> None:
         pass    # older jaxlibs: benchmarks still run, just recompile
 
 
+def _run_memory_probe() -> None:
+    import subprocess
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.probe_memory", "--layers", "2"],
+        cwd=Path(__file__).parent.parent)
+    if proc.returncode != 0:
+        raise RuntimeError(f"probe_memory exited {proc.returncode}")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slower)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig3,fig4,fig5,fig6,realworld,"
-                         "kernels,sweep")
+                         "kernels,sweep,memory (memory runs only when "
+                         "explicitly selected)")
     ap.add_argument("--no-compile-cache", action="store_true",
                     help="disable the persistent XLA compilation cache")
     args = ap.parse_args()
@@ -64,8 +74,16 @@ def main() -> int:
         # BENCH_sweep.json perf-trajectory snapshots at the repo root
         ("sweep", lambda: emit(bench_sweep.run(full=args.full),
                                "bench_sweep")),
+        # model-stack HLO memory forensics (probe_memory.py).  Runs as a
+        # subprocess: the probe must set XLA_FLAGS (512 host devices)
+        # before jax initializes, which cannot happen in this process.
+        # Opt-in only (--only memory): it compiles model cells, which is
+        # out of the cache-benchmark jobs' wall-clock budget.
+        ("memory", _run_memory_probe),
     ]
     for name, fn in jobs:
+        if want is None and name == "memory":
+            continue
         if want and name not in want:
             continue
         print(f"\n=== {name} ===")

@@ -46,7 +46,8 @@ import numpy as np
 from .distributions import Deterministic, MissLatency
 from .ranking import POLICIES, PolicyParams
 from .simulator import (SimResult, _behavior_multi, _behavior_static,
-                        _commit_due, _commit_one, _serve, _tree_sel)
+                        _commit_due, _commit_one, _serve, _tree_sel,
+                        batched_update_mode)
 from .state import SimState, init_state
 from .trace import Trace
 
@@ -238,15 +239,18 @@ def _hier_step(b1, b2, p1, p2, estimate_z, sizes, shard_ids, carry,
     is_l1_miss = ~(l1.obj.cached[s, i] | l1.obj.in_flight[s, i])
 
     # --- conditional L2 arrival: resolution time R_L2(t) -----------------
-    l2_served, l2_lat = _serve(b2, p2, l2, sizes, t, i, z)
+    # the serve's write gate carries the condition (O(1) no-op writes when
+    # the request hits L1 — DESIGN.md §11; the historical whole-state
+    # select here cost O(state) per request); the resolution latency is
+    # computed unconditionally either way.
     serve_l2 = is_l1_miss if valid is True else valid & is_l1_miss
-    l2 = _tree_sel(serve_l2, l2_served, l2)
+    l2, l2_lat = _serve(b2, p2, l2, sizes, t, i, z, valid=serve_l2)
     z_eff = hop + jnp.where(is_l1_miss, l2_lat, 0.0)
 
-    # --- serve at the owning L1 shard (one-hot over the shard axis) ------
+    # --- serve at the owning L1 shard (gated over the shard axis) --------
     def serve_one(st, active):
-        new, _ = _serve(b1, p1, st, sizes, t, i, z_eff)
-        return _tree_sel(active, new, st)
+        new, _ = _serve(b1, p1, st, sizes, t, i, z_eff, valid=active)
+        return new
 
     owner = shard_ids == s
     l1 = jax.vmap(serve_one)(l1, owner if valid is True else owner & valid)
@@ -258,9 +262,9 @@ def _simulate_hier_impl(trace: HierTrace, l1_capacity, l2_capacity, key,
                         estimate_z: bool, n_shards: int) -> HierResult:
     """Unjitted hierarchy body over prebuilt per-tier behaviors.
 
-    The shard axis always uses one-hot state updates (``onehot=True``
-    behaviors): shard-local writes are lane-varying under the shard vmap,
-    exactly the batched-scatter case DESIGN.md §2 avoids — and it keeps
+    The shard axis always uses a batched update lowering (one-hot or the
+    lane scatter, by universe size — DESIGN.md §11): shard-local writes
+    are lane-varying under the shard vmap, and the choice keeps
     sweep-engine batching bitwise-transparent on top.
     """
     sizes = trace.sizes
@@ -283,9 +287,17 @@ def _simulate_hier_impl(trace: HierTrace, l1_capacity, l2_capacity, key,
 
 def _hier_impl_named(trace, l1_capacity, l2_capacity, key, policy_name,
                      l2_policy, params, l2_params, estimate_z, n_shards):
-    """Static-policy composition point (also vmapped by sweep_hier_grid)."""
-    b1 = _behavior_static(POLICIES[policy_name], params, "rank", onehot=True)
-    b2 = _behavior_static(POLICIES[l2_policy], l2_params, "rank", onehot=True)
+    """Static-policy composition point (also vmapped by sweep_hier_grid).
+
+    Both tiers use the N-dependent batched update lowering
+    (:func:`repro.core.simulator.batched_update_mode`, DESIGN.md §11):
+    shard-local writes are lane-varying under the shard vmap, and the
+    choice keeps sweep-engine batching bitwise-transparent on top."""
+    update = batched_update_mode(trace.n_objects)
+    b1 = _behavior_static(POLICIES[policy_name], params, "rank",
+                          update=update)
+    b2 = _behavior_static(POLICIES[l2_policy], l2_params, "rank",
+                          update=update)
     return _simulate_hier_impl(trace, l1_capacity, l2_capacity, key, b1, b2,
                                params, l2_params, estimate_z, n_shards)
 
@@ -295,8 +307,10 @@ def _hier_multi_impl(trace, l1_capacity, l2_capacity, key, policy_idx,
                      estimate_z, n_shards):
     """Multi-policy composition point: the L1 policy is a traced lane index
     (the L2 policy stays static — it is an environment, not a swept axis)."""
-    b1 = _behavior_multi(policy_names, policy_idx, params)
-    b2 = _behavior_static(POLICIES[l2_policy], l2_params, "rank", onehot=True)
+    update = batched_update_mode(trace.n_objects)
+    b1 = _behavior_multi(policy_names, policy_idx, params, update=update)
+    b2 = _behavior_static(POLICIES[l2_policy], l2_params, "rank",
+                          update=update)
     return _simulate_hier_impl(trace, l1_capacity, l2_capacity, key, b1, b2,
                                params, l2_params, estimate_z, n_shards)
 
@@ -360,9 +374,12 @@ def _hier_chunk_jit(carry, times, objs, shards, z_draw, hop_draw, valid,
                     estimate_z, n_shards):
     """``valid`` is ``None`` (static) on full chunks — the step then
     constant-folds to exactly the single-scan graph; a padded tail chunk
-    passes the mask and pays the per-step select once."""
-    b1 = _behavior_static(POLICIES[policy_name], params, "rank", onehot=True)
-    b2 = _behavior_static(POLICIES[l2_policy], l2_params, "rank", onehot=True)
+    threads the mask into the gated serves (DESIGN.md §11)."""
+    update = batched_update_mode(sizes.shape[0])
+    b1 = _behavior_static(POLICIES[policy_name], params, "rank",
+                          update=update)
+    b2 = _behavior_static(POLICIES[l2_policy], l2_params, "rank",
+                          update=update)
     shard_ids = jnp.arange(n_shards)
 
     def step(carry, req):

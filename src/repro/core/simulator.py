@@ -40,8 +40,8 @@ import numpy as np
 from .distributions import Exponential
 from .ranking import (POLICIES, Policy, PolicyParams, agg_mean_hat_at,
                       epi_stochastic_vacdh, lambda_hat_at, make_substrate)
-from .state import (SimState, init_state, kahan_add, onehot_add, onehot_set,
-                    shift_times)
+from .state import (SimState, init_state, kahan_add, lane_add, lane_set,
+                    onehot_add, onehot_set, shift_times)
 from .trace import RequestStream, Trace, stream_of_trace
 
 _EPS = 1e-6
@@ -64,6 +64,27 @@ def _tree_sel(flag, new, old):
 #   'kernel_interpret' — fused Pallas kernel, interpret mode (any backend)
 #   'ref'              — kernels.ref jnp oracle (CPU fallback, same math)
 _SCORE_MODES = ("rank", "kernel", "kernel_interpret", "ref")
+
+# State-update lowerings (_Behavior.update; DESIGN.md §11): 'scatter' for
+# unbatched graphs, 'lane' for batched ones (the custom_vmap diagonal-
+# scatter seam), 'onehot' as the historical parity oracle.
+_UPDATE_MODES = ("scatter", "onehot", "lane")
+
+# Batched-graph crossover (DESIGN.md §11): a one-hot write costs O(N)
+# elements per lane but lowers to one fused select; a diagonal scatter
+# touches O(1) elements per lane but costs a gather+scatter op pair whose
+# fixed per-op overhead dominates tiny tables on XLA:CPU.  Measured on the
+# 11-policy roster (EXPERIMENTS.md §Perf iteration 6): one-hot wins at
+# N <= 1000, the lane scatter wins 1.4x at N = 3000 — the threshold sits
+# at the measured crossover.  Results are bitwise identical either way;
+# this picks dispatch shape only.
+LANE_UPDATE_MIN_OBJECTS = 2048
+
+
+def batched_update_mode(n_objects: int) -> str:
+    """The default state-update lowering for a *batched* graph over a
+    universe of ``n_objects`` (unbatched graphs always use 'scatter')."""
+    return "lane" if n_objects >= LANE_UPDATE_MIN_OBJECTS else "onehot"
 
 
 def _sel(flag, a, b):
@@ -96,16 +117,27 @@ class _Behavior(NamedTuple):
     commit (always True in multi mode so lanes stay in lockstep; only
     AdaptSize consumes the coin either way).
 
-    ``onehot`` — state-update lowering.  Point updates are O(1) scatters in
-    unbatched graphs (cheapest at large N) and O(N) one-hot selects when
-    the graph will be vmapped (batched scatters with lane-varying indices
-    loop on XLA:CPU; selects stay elementwise).  Both write bit-identical
-    states, so the choice never shows up in results (tests/test_sweep.py).
+    ``update`` — state-update lowering, one of :data:`_UPDATE_MODES`
+    (DESIGN.md §11).  'scatter': O(1) point scatters, the unbatched fast
+    path.  'lane': the ``custom_vmap`` lane seam — identical scatters
+    unbatched, ONE diagonal scatter over the stacked ``[L, N]`` state when
+    the graph is vmapped (O(1) per lane; the default for every batched
+    graph).  'onehot': O(N) masked selects, the historical batched
+    lowering, kept as the parity oracle.  All three write bit-identical
+    states, so the choice never shows up in results (tests/test_hotpath.py,
+    tests/test_sweep.py).
 
     ``evict_top`` — length of the precomputed victim order consumed by the
     evict-until-fit loop (module default :data:`EVICT_TOP`; 0 = legacy
     per-eviction argmin only).  Any value yields bitwise-identical results
     (tests/test_hotpath.py) — it is purely a dispatch-shape knob.
+
+    The write helpers take ``valid`` (python ``True``, constant-folded to
+    the plain write, or a traced bool): an invalid write stores the
+    target's own bits back — an O(1) no-op in the scatter/lane lowerings,
+    a mask term in the one-hot one — which is what lets the streaming
+    engine's padded tail steps run the normal step graph instead of a
+    whole-state select tree (DESIGN.md §11).
     """
 
     select: object
@@ -114,15 +146,43 @@ class _Behavior(NamedTuple):
     adaptsize: object
     compare_admission: object
     split_key: bool
-    onehot: bool
+    update: str
     evict_top: int
 
-    # --- state writes (see ``onehot``) -----------------------------------
-    def set_at(self, x, j, jhot, val):
-        return onehot_set(x, jhot, val) if self.onehot else x.at[j].set(val)
+    # --- state writes (see ``update``) -----------------------------------
+    def set_at(self, x, j, jhot, val, valid=True):
+        if self.update == "onehot":
+            hot = jhot if valid is True else jhot & valid
+            return onehot_set(x, hot, val)
+        if valid is not True:
+            val = jnp.where(valid, val, x[j])
+        return lane_set(x, j, val) if self.update == "lane" \
+            else x.at[j].set(val)
 
-    def add_at(self, x, j, jhot, val):
-        return onehot_add(x, jhot, val) if self.onehot else x.at[j].add(val)
+    def add_at(self, x, j, jhot, val, valid=True):
+        if self.update == "onehot":
+            hot = jhot if valid is True else jhot & valid
+            return onehot_add(x, hot, val)
+        if valid is not True:
+            new = jnp.where(valid, x[j] + val, x[j])
+            return lane_set(x, j, new) if self.update == "lane" \
+                else x.at[j].set(new)
+        return lane_add(x, j, val) if self.update == "lane" \
+            else x.at[j].add(val)
+
+    def cond_set_at(self, x, j, cond, val):
+        """x[j] = val where ``cond`` (the eviction/admission writes).
+
+        One-hot keeps the oracle form ``where(cond & hot, val, x)``; the
+        scatter/lane lowerings write ``where(cond, val, x[j])`` at ``j`` —
+        an O(1) gather+scatter, bit-identical to the historical
+        ``where(cond, x.at[j].set(val), x)`` whole-table select."""
+        if self.update == "onehot":
+            hot = jnp.arange(x.shape[0]) == j
+            return jnp.where(cond & hot, val, x)
+        new = jnp.where(cond, val, x[j])
+        return lane_set(x, j, new) if self.update == "lane" \
+            else x.at[j].set(new)
 
 
 def _static_false(flag) -> bool:
@@ -193,8 +253,10 @@ def _rank_select_static(policy: Policy, p: PolicyParams, score_mode: str,
 
 
 def _behavior_static(policy: Policy, p: PolicyParams, score_mode: str,
-                     onehot: bool = False,
+                     update: str = "scatter",
                      evict_top: int | None = None) -> _Behavior:
+    if update not in _UPDATE_MODES:
+        raise ValueError(f"update={update!r}; expected one of {_UPDATE_MODES}")
     return _Behavior(
         select=lambda o, sizes, t, top: _rank_select_static(
             policy, p, score_mode, o, sizes, t, top),
@@ -203,13 +265,14 @@ def _behavior_static(policy: Policy, p: PolicyParams, score_mode: str,
         adaptsize=policy.admission == "adaptsize",
         compare_admission=policy.compare_admission,
         split_key=policy.admission == "adaptsize",
-        onehot=onehot,
+        update=update,
         evict_top=EVICT_TOP if evict_top is None else int(evict_top))
 
 
 def _behavior_multi(policy_names: tuple, policy_idx, p: PolicyParams,
                     score_mode: str = "rank",
-                    evict_top: int | None = None) -> _Behavior:
+                    evict_top: int | None = None,
+                    update: str = "lane") -> _Behavior:
     """One lane of the unified multi-policy graph.
 
     The shared estimator substrate is computed ONCE per commit; every
@@ -235,6 +298,8 @@ def _behavior_multi(policy_names: tuple, policy_idx, p: PolicyParams,
         idx, vals = victim_order_ref(ranks, o.cached, top)
         return ranks, idx, vals
 
+    if update not in _UPDATE_MODES:
+        raise ValueError(f"update={update!r}; expected one of {_UPDATE_MODES}")
     return _Behavior(
         select=select,
         greedydual=flag(lambda q: q.greedydual),
@@ -242,7 +307,7 @@ def _behavior_multi(policy_names: tuple, policy_idx, p: PolicyParams,
         adaptsize=flag(lambda q: q.admission == "adaptsize"),
         compare_admission=flag(lambda q: q.compare_admission),
         split_key=True,
-        onehot=True,
+        update=update,
         evict_top=EVICT_TOP if evict_top is None else int(evict_top))
 
 
@@ -295,7 +360,7 @@ def _commit_one(b: _Behavior, p: PolicyParams, estimate_z: bool,
     o = state.obj
     done_t = jnp.where(o.in_flight, o.complete_t, jnp.inf)
     j = jnp.argmin(done_t)
-    jhot = (jnp.arange(n) == j) if b.onehot else None
+    jhot = (jnp.arange(n) == j) if b.update == "onehot" else None
     t_c = o.complete_t[j]
     realized = t_c - o.issue_t[j]
     ep = o.episode_delay[j]
@@ -356,10 +421,7 @@ def _commit_one(b: _Behavior, p: PolicyParams, estimate_z: bool,
         v = order_idx[k]
         vv = order_vals[k]
         can = vv < cmp
-        if b.onehot:
-            cached = jnp.where(can & (jnp.arange(n) == v), False, cached)
-        else:
-            cached = jnp.where(can, cached.at[v].set(False), cached)
+        cached = b.cond_set_at(cached, v, can, False)
         free = jnp.where(can, free + sizes[v], free)
         nev = jnp.where(can, nev + 1.0, nev)
         clock = _sel(b.greedydual,
@@ -385,10 +447,7 @@ def _commit_one(b: _Behavior, p: PolicyParams, estimate_z: bool,
         vr = jnp.where(cached, ranks, jnp.inf)
         v = jnp.argmin(vr)
         can = vr[v] < cmp
-        if b.onehot:
-            cached = jnp.where(can & (jnp.arange(n) == v), False, cached)
-        else:
-            cached = jnp.where(can, cached.at[v].set(False), cached)
+        cached = b.cond_set_at(cached, v, can, False)
         free = jnp.where(can, free + sizes[v], free)
         nev = jnp.where(can, nev + 1.0, nev)
         clock = _sel(b.greedydual,
@@ -399,10 +458,7 @@ def _commit_one(b: _Behavior, p: PolicyParams, estimate_z: bool,
         cond2, body2, (cached, free, gd_clock, fit_ok, n_ev))
 
     do_admit = admit_ok & fit_ok & (free >= s_j)
-    if b.onehot:
-        cached = jnp.where(do_admit & jhot, True, cached)
-    else:
-        cached = jnp.where(do_admit, cached.at[j].set(True), cached)
+    cached = b.cond_set_at(cached, j, do_admit, True)
     free = jnp.where(do_admit, free - s_j, free)
     o = o._replace(cached=cached)
 
@@ -423,7 +479,7 @@ def _commit_due(b: _Behavior, p: PolicyParams, estimate_z: bool,
 
 
 def _serve(b: _Behavior, p: PolicyParams, state: SimState,
-           sizes: jax.Array, t, i, z_realized):
+           sizes: jax.Array, t, i, z_realized, valid=True):
     """Serve the request (t, i); z_realized is used only if it's a miss.
 
     Returns ``(state, latency)``: the latency is also accumulated into the
@@ -434,9 +490,21 @@ def _serve(b: _Behavior, p: PolicyParams, state: SimState,
     point scatters only; the GreedyDual upkeep (the one historical O(N)
     full-table cost build) is a scalar gather chain and is folded out of
     the graph entirely for statically non-GreedyDual policies
-    (DESIGN.md §10)."""
+    (DESIGN.md §10).
+
+    ``valid`` gates every state write (DESIGN.md §11): python ``True``
+    constant-folds to the plain serve; a traced bool makes the serve a
+    bitwise no-op on the state when False — point writes store the
+    target's own bits back (O(1)), scalar accumulators are selected —
+    while the returned latency is computed either way (the hierarchy reads
+    it off conditional L2 serves).  This replaces the historical
+    whole-state select tree for padded streaming steps and the
+    hierarchy's owner/L2 masks, whose per-step O(state) cost was the
+    measured ~3x padded-tail penalty (EXPERIMENTS.md §Perf iteration 6).
+    """
     o = state.obj
-    ihot = (jnp.arange(sizes.shape[0]) == i) if b.onehot else None
+    ihot = (jnp.arange(sizes.shape[0]) == i) if b.update == "onehot" else None
+    gate = (lambda f: f) if valid is True else (lambda f: f & valid)
     is_hit = o.cached[i]
     is_delayed = o.in_flight[i]
     is_miss = ~(is_hit | is_delayed)
@@ -447,17 +515,19 @@ def _serve(b: _Behavior, p: PolicyParams, state: SimState,
     # --- miss: issue fetch ------------------------------------------------
     comp = jnp.where(is_miss, t + z_realized, o.complete_t[i])
     o = o._replace(
-        in_flight=b.set_at(o.in_flight, i, ihot, is_miss | o.in_flight[i]),
-        complete_t=b.set_at(o.complete_t, i, ihot, comp),
+        in_flight=b.set_at(o.in_flight, i, ihot, is_miss | o.in_flight[i],
+                           valid),
+        complete_t=b.set_at(o.complete_t, i, ihot, comp, valid),
         issue_t=b.set_at(o.issue_t, i, ihot,
-                         jnp.where(is_miss, t, o.issue_t[i])),
+                         jnp.where(is_miss, t, o.issue_t[i]), valid),
         episode_delay=b.set_at(
             o.episode_delay, i, ihot,
             jnp.where(is_miss, z_realized,
-                      o.episode_delay[i] + jnp.where(is_delayed, lat, 0.0))),
+                      o.episode_delay[i] + jnp.where(is_delayed, lat, 0.0)),
+            valid),
     )
     min_complete = jnp.minimum(state.min_complete,
-                               jnp.where(is_miss, comp, jnp.inf))
+                               jnp.where(gate(is_miss), comp, jnp.inf))
 
     # --- access statistics (every request) --------------------------------
     cnt = o.count[i]
@@ -468,25 +538,30 @@ def _serve(b: _Behavior, p: PolicyParams, state: SimState,
                    jnp.where(cnt == 1.0, gap,
                              o.gap_mean[i] + a_eff * (gap - o.gap_mean[i])))
     o = o._replace(
-        gap_mean=b.set_at(o.gap_mean, i, ihot, gm),
+        gap_mean=b.set_at(o.gap_mean, i, ihot, gm, valid),
         first_access=b.set_at(o.first_access, i, ihot,
-                              jnp.where(cnt == 0.0, t, o.first_access[i])),
-        last_access=b.set_at(o.last_access, i, ihot, t),
-        count=b.set_at(o.count, i, ihot, cnt + 1.0),
+                              jnp.where(cnt == 0.0, t, o.first_access[i]),
+                              valid),
+        last_access=b.set_at(o.last_access, i, ihot, t, valid),
+        count=b.set_at(o.count, i, ihot, cnt + 1.0, valid),
     )
     if not _static_false(b.greedydual):
         hi = state.gd_clock + _gd_cost_at(b, o, sizes, p, i)
         o = o._replace(gd_h=b.set_at(
             o.gd_h, i, ihot,
-            _sel(b.greedydual, jnp.where(is_hit, hi, o.gd_h[i]), o.gd_h[i])))
+            _sel(b.greedydual, jnp.where(is_hit, hi, o.gd_h[i]), o.gd_h[i]),
+            valid))
 
     lat_sum, lat_comp = kahan_add(state.lat_sum, state.lat_comp, lat)
+    if valid is not True:
+        lat_sum = jnp.where(valid, lat_sum, state.lat_sum)
+        lat_comp = jnp.where(valid, lat_comp, state.lat_comp)
     state = state._replace(
         obj=o, min_complete=min_complete,
         lat_sum=lat_sum, lat_comp=lat_comp,
-        n_hits=state.n_hits + is_hit,
-        n_delayed=state.n_delayed + is_delayed,
-        n_misses=state.n_misses + is_miss,
+        n_hits=state.n_hits + gate(is_hit),
+        n_delayed=state.n_delayed + gate(is_delayed),
+        n_misses=state.n_misses + gate(is_miss),
     )
     return state, lat
 
@@ -517,17 +592,17 @@ def _run_chunk(b: _Behavior, params: PolicyParams, estimate_z: bool,
     ``(times, objs, z_draw, valid)`` for the padded tail chunk.  Padded
     steps carry ``valid=False`` and ``t=-inf``: the commit loop's
     condition ``min_complete <= -inf`` is vacuously false (a bitwise no-op
-    on the state), and the serve's writes are discarded by a tree-wide
-    select.  Only the tail pays for that select — on full chunks the
-    ~state-sized per-step masking would cost ~2x wall-clock (measured,
-    EXPERIMENTS.md §Scale), which is why the fast path exists.
+    on the state), and the serve's writes are gated O(1) no-ops
+    (:func:`_serve` ``valid``).  The historical whole-state select tree
+    here cost ~3x per padded step (measured — it was most of the PR-4
+    "dispatch-bound" streaming loss, EXPERIMENTS.md §Perf iteration 6);
+    full chunks still compile the gate-free graph.
     """
     def step(state: SimState, req):
         t, i, z = req[:3]
         new = _commit_due(b, params, estimate_z, state, sizes, t)
-        new, _ = _serve(b, params, new, sizes, t, i, z)
-        if len(req) == 4:                  # padded tail: mask invalid steps
-            new = _tree_sel(req[3], new, state)
+        new, _ = _serve(b, params, new, sizes, t, i, z,
+                        valid=req[3] if len(req) == 4 else True)
         return new, None
 
     state, _ = jax.lax.scan(step, state, chunk)
@@ -546,8 +621,8 @@ def _chunk_step_jit(state: SimState, times, objs, z_draw, valid, delta,
     times by ``delta`` (0.0 is a bitwise no-op), then scan the chunk.  The
     state argument is donated, so the per-object state occupies one set of
     device buffers for the whole streamed trace.  ``valid`` is ``None``
-    (static: the select-free full-chunk graph) except on a padded tail."""
-    b = _behavior_static(POLICIES[policy_name], params, score_mode, False,
+    (static: the gate-free full-chunk graph) except on a padded tail."""
+    b = _behavior_static(POLICIES[policy_name], params, score_mode, "scatter",
                          evict_top)
     state = shift_times(state, delta)
     chunk = (times, objs, z_draw) if valid is None \
@@ -560,20 +635,74 @@ def _result_of_state(state: SimState) -> SimResult:
                      state.n_misses, state.n_evictions)
 
 
+def _stream_chunks(times64, objs, z_draw, chunk_size: int, rebase: bool):
+    """Host-side chunk builder: yields ``(device_arrays, valid, delta)`` per
+    chunk — the pure prep half of the stream loop, so the dispatch loop can
+    run it one chunk AHEAD of the executing chunk (double buffering).
+    ``jax.device_put`` enqueues the transfer without blocking, so on
+    accelerator backends chunk k+1 ships while chunk k computes; on CPU it
+    overlaps the numpy slicing with the async scan dispatch."""
+    base = 0.0
+    n = times64.shape[0]
+    for lo in range(0, max(n, 1), chunk_size):
+        hi = min(lo + chunk_size, n)
+        new_base = float(times64[lo]) if (rebase and hi > lo) else base
+        pad = chunk_size - (hi - lo)
+        t_loc = (times64[lo:hi] - new_base).astype(np.float32)
+        chunk_t = np.concatenate([t_loc, np.full(pad, -np.inf, np.float32)])
+        chunk_i = np.concatenate([objs[lo:hi], np.zeros(pad, np.int32)])
+        chunk_z = np.concatenate([z_draw[lo:hi], np.zeros(pad, np.float32)])
+        valid = None if pad == 0 else jax.device_put(np.concatenate(
+            [np.ones(hi - lo, bool), np.zeros(pad, bool)]))
+        yield (jax.device_put(chunk_t), jax.device_put(chunk_i),
+               jax.device_put(chunk_z), valid,
+               jnp.float32(new_base - base))
+        base = new_base
+
+
+def resolve_chunk_size(chunk_size, n_requests: int) -> int:
+    """Map the user-facing ``chunk_size`` to a concrete size: an int passes
+    through; ``'auto'``/``None`` picks the pad-minimizing size via
+    :func:`repro.core.trace.auto_chunk_size` (a padded tail step costs the
+    same as a real one under the gated serve, but it still *computes*, so
+    zero pad is strictly better when the trace length is known)."""
+    if chunk_size is None or chunk_size == "auto":
+        from .trace import auto_chunk_size
+        return auto_chunk_size(n_requests)
+    if isinstance(chunk_size, str):
+        raise ValueError(f"chunk_size={chunk_size!r}; the only string "
+                         f"value is 'auto' (or pass an int / None)")
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size={chunk_size} must be >= 1")
+    return int(chunk_size)
+
+
 def simulate_stream(stream: RequestStream, capacity: float,
                     policy: str = "stoch_vacdh",
                     params: PolicyParams | None = None, key=None,
                     estimate_z: bool = False, use_kernel=False,
-                    chunk_size: int = 65536,
+                    chunk_size: int | str | None = 65536,
                     rebase: bool = True,
-                    evict_top: int | None = None) -> SimResult:
+                    evict_top: int | None = None,
+                    prefetch: bool = True) -> SimResult:
     """Run one policy over a host-resident stream, one chunk at a time.
 
     Device residency is O(n_objects + chunk_size) regardless of trace
     length: each fixed-size chunk is shipped to the device, scanned with
     the carried (donated) :class:`SimState`, and released.  The tail chunk
     is padded with ``valid=False`` sentinels so every chunk shares one
-    compiled graph.
+    compiled graph; padded steps run the normal step graph with O(1)-gated
+    writes (DESIGN.md §11).  ``chunk_size='auto'`` picks the
+    pad-minimizing size (:func:`repro.core.trace.auto_chunk_size`).
+
+    ``prefetch=True`` double-buffers the dispatch pipeline: chunk k+1 is
+    sliced, converted, and shipped to the device while chunk k's scan
+    executes, and aggregates stay device-resident (Kahan sums in the
+    carried state) until the single pull at the end — the host never
+    blocks on a chunk boundary.  ``prefetch=False`` runs the historical
+    strictly-sequential loop; both orders feed identical arrays to the
+    same compiled graph, so results are bit-for-bit equal
+    (tests/test_streaming.py pins it).
 
     ``rebase=True`` (the long-trace default) re-anchors each chunk to its
     own start time: the f64 host timestamps are converted to f32 *offsets
@@ -589,8 +718,7 @@ def simulate_stream(stream: RequestStream, capacity: float,
         params = PolicyParams()
     if key is None:
         key = jax.random.key(0)
-    if chunk_size < 1:
-        raise ValueError(f"chunk_size={chunk_size} must be >= 1")
+    chunk_size = resolve_chunk_size(chunk_size, stream.n_requests)
     score_mode = resolve_score_mode(use_kernel)
     times64 = np.asarray(stream.times, np.float64)
     objs = np.asarray(stream.objs, np.int32)
@@ -602,24 +730,24 @@ def simulate_stream(stream: RequestStream, capacity: float,
                        jnp.asarray(key).copy(),
                        jnp.asarray(stream.z_mean, jnp.float32))
 
-    base = 0.0
-    n = times64.shape[0]
-    for lo in range(0, max(n, 1), chunk_size):
-        hi = min(lo + chunk_size, n)
-        new_base = float(times64[lo]) if (rebase and hi > lo) else base
-        pad = chunk_size - (hi - lo)
-        t_loc = (times64[lo:hi] - new_base).astype(np.float32)
-        chunk_t = np.concatenate([t_loc, np.full(pad, -np.inf, np.float32)])
-        chunk_i = np.concatenate([objs[lo:hi], np.zeros(pad, np.int32)])
-        chunk_z = np.concatenate([z_draw[lo:hi], np.zeros(pad, np.float32)])
-        valid = None if pad == 0 else jnp.asarray(np.concatenate(
-            [np.ones(hi - lo, bool), np.zeros(pad, bool)]))
-        state = _chunk_step_jit(state, jnp.asarray(chunk_t),
-                                jnp.asarray(chunk_i), jnp.asarray(chunk_z),
-                                valid,
-                                jnp.float32(new_base - base), sizes, params,
-                                policy, estimate_z, score_mode, evict_top)
-        base = new_base
+    def dispatch(state, chunk):
+        t, i, z, valid, delta = chunk
+        return _chunk_step_jit(state, t, i, z, valid, delta, sizes, params,
+                               policy, estimate_z, score_mode, evict_top)
+
+    chunks = _stream_chunks(times64, objs, z_draw, chunk_size, rebase)
+    if prefetch:
+        # one-chunk lookahead: pull chunk k+1 from the builder (host slice
+        # + async device_put) BEFORE dispatching chunk k's scan, so the
+        # prep/transfer of the next chunk overlaps the current execution
+        # even on backends whose dispatch is not fully asynchronous.
+        pending = next(chunks, None)
+        while pending is not None:
+            cur, pending = pending, next(chunks, None)
+            state = dispatch(state, cur)
+    else:
+        for cur in chunks:
+            state = dispatch(state, cur)
     return _result_of_state(state)
 
 
@@ -641,13 +769,13 @@ def simulate_chunked(trace: Trace, capacity: float,
 def _simulate_impl(trace: Trace, capacity, key, policy_name: str,
                    params: PolicyParams, estimate_z: bool,
                    score_mode: str = "rank",
-                   onehot: bool = False,
+                   update: str = "scatter",
                    evict_top: int | None = None) -> SimResult:
     """Unjitted single-policy simulation body (statically specialized).
 
-    ``onehot=True`` selects vmap-friendly state updates (set by the sweep
-    engine when the graph is actually batched)."""
-    b = _behavior_static(POLICIES[policy_name], params, score_mode, onehot,
+    ``update`` selects the state-update lowering (DESIGN.md §11) — the
+    sweep engine passes 'lane' when the graph is actually batched."""
+    b = _behavior_static(POLICIES[policy_name], params, score_mode, update,
                          evict_top)
     return _run_scan(b, trace, capacity, key, params, estimate_z)
 
@@ -655,11 +783,16 @@ def _simulate_impl(trace: Trace, capacity, key, policy_name: str,
 def _simulate_multi_impl(trace: Trace, capacity, key, policy_idx,
                          params: PolicyParams, policy_names: tuple,
                          estimate_z: bool,
-                         score_mode: str = "rank") -> SimResult:
+                         score_mode: str = "rank",
+                         update: str | None = None) -> SimResult:
     """Unjitted multi-policy body: the policy is a traced lane index, so one
     compiled graph serves a whole policies x hyperparameter grid
-    (:mod:`repro.core.sweep`)."""
-    b = _behavior_multi(policy_names, policy_idx, params, score_mode)
+    (:mod:`repro.core.sweep`).  ``update=None`` auto-selects the batched
+    lowering by universe size (:func:`batched_update_mode`)."""
+    if update is None:
+        update = batched_update_mode(trace.n_objects)
+    b = _behavior_multi(policy_names, policy_idx, params, score_mode,
+                        update=update)
     return _run_scan(b, trace, capacity, key, params, estimate_z)
 
 

@@ -1,4 +1,4 @@
-"""Simulator state pytrees for the delayed-hit cache.
+"""Simulator state pytrees for the delayed-hit cache (DESIGN.md §2).
 
 Everything is a struct-of-arrays over the object universe (size N) so the
 whole simulation runs as a single ``lax.scan`` over the request trace with
@@ -6,6 +6,7 @@ whole simulation runs as a single ``lax.scan`` over the request trace with
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -113,11 +114,26 @@ def kahan_add(total: jax.Array, comp: jax.Array, x: jax.Array):
 
 
 # ---------------------------------------------------------------------------
-# One-hot state updates.  ``x.at[i].set(v)`` lowers to a scatter whose
-# batched form (lane-varying indices under the sweep engine's vmap) XLA:CPU
-# executes as a per-lane loop; a masked select over the N-vector is a single
-# SIMD-friendly elementwise op in both the single-lane and batched cases,
-# and leaves untouched positions bit-identical.
+# Point-update lowerings (DESIGN.md §11).  Three ways to write "x[j] = v"
+# into per-object state, all bit-identical in results:
+#
+#   scatter  — ``x.at[j].set(v)``: O(1), the unbatched fast path.
+#   one-hot  — masked select over the N-vector: O(N) elementwise, the
+#              historical batched lowering, kept in-tree as the parity
+#              oracle (a batched select leaves untouched positions
+#              bit-identical by construction).
+#   lane     — ``lane_set``/``lane_add`` below: a ``custom_vmap`` seam
+#              whose unbatched form IS the scatter and whose batched form
+#              is ONE scatter over the lane diagonal of the stacked
+#              ``[L, N]`` state (or the Pallas kernel,
+#              :mod:`repro.kernels.lane_scatter`) — O(1) per lane instead
+#              of the one-hot's O(N) per lane.
+#
+# The one-hot note that used to live here ("batched scatters loop on
+# XLA:CPU") conflated the loop's O(L) trip count with the select's O(L*N)
+# element work; measured at N=3000 the diagonal scatter wins ~3.5x
+# (EXPERIMENTS.md §Perf iteration 6), which is why `lane` is now the
+# default batched lowering and one-hot is the oracle.
 # ---------------------------------------------------------------------------
 def onehot_set(x: jax.Array, hot: jax.Array, val) -> jax.Array:
     """x with position(s) where ``hot`` is True replaced by ``val``."""
@@ -127,3 +143,81 @@ def onehot_set(x: jax.Array, hot: jax.Array, val) -> jax.Array:
 def onehot_add(x: jax.Array, hot: jax.Array, val) -> jax.Array:
     """x with ``val`` added at position(s) where ``hot`` is True."""
     return jnp.where(hot, x + val, x)
+
+
+# Lane-path backend: 'scatter' = the jnp diagonal scatter (CPU fast path
+# and ground truth), 'kernel' = compiled Pallas (TPU), 'kernel_interpret' =
+# the kernel under the Pallas interpreter (any backend; tests).  Read at
+# TRACE time — flipping it does not invalidate already-compiled graphs
+# (call ``jax.clear_caches()`` in tests).
+LANE_BACKENDS = ("scatter", "kernel", "kernel_interpret")
+_lane_backend = "scatter"
+
+
+def set_lane_backend(mode: str) -> None:
+    """Select how the batched lane path lowers (see :data:`LANE_BACKENDS`)."""
+    global _lane_backend
+    if mode not in LANE_BACKENDS:
+        raise ValueError(f"lane backend {mode!r}; expected one of "
+                         f"{LANE_BACKENDS}")
+    _lane_backend = mode
+
+
+def _lane_dispatch(x, j, v, add: bool):
+    if _lane_backend == "scatter":
+        from repro.kernels.ref import (lane_scatter_add_ref,
+                                       lane_scatter_set_ref)
+        fn = lane_scatter_add_ref if add else lane_scatter_set_ref
+        return fn(x, j, v)
+    from repro.kernels.lane_scatter import lane_scatter_add, lane_scatter_set
+    fn = lane_scatter_add if add else lane_scatter_set
+    return fn(x, j, v, interpret=(_lane_backend == "kernel_interpret"))
+
+
+def _lane_rule(axis_size, in_batched, x, j, val, *, add: bool):
+    """The batched lowering: one diagonal scatter over the ``[L, N]`` stack.
+
+    Handles every batching combination the simulator produces: ``x`` is
+    (virtually) always batched; ``j`` is batched under lane vmaps whose
+    index is lane-dependent (the sweep engine's commit argmin) and
+    unbatched when every lane writes the same column (the hierarchy's
+    broadcast request id — lowered as a column update, no index vector at
+    all); ``val`` follows the data.  Nested vmaps (traces over lanes,
+    grids over shards) batch the emitted scatter with XLA's stock rules —
+    still one scatter op, never a select tree.
+    """
+    xb, jb, vb = in_batched
+    if not xb:
+        x = jnp.broadcast_to(x, (axis_size,) + jnp.shape(x))
+    val = jnp.asarray(val, x.dtype)
+    if not vb:
+        val = jnp.broadcast_to(val, (axis_size,))
+    if jb:
+        out = _lane_dispatch(x, j, val, add)
+    elif add:
+        col = x[:, j]
+        new = (col | val) if x.dtype == jnp.bool_ else col + val
+        out = x.at[:, j].set(new)
+    else:
+        out = x.at[:, j].set(val)
+    return out, True
+
+
+@jax.custom_batching.custom_vmap
+def lane_set(x: jax.Array, j, val) -> jax.Array:
+    """``x.at[j].set(val)`` whose vmapped form is a lane scatter."""
+    return x.at[j].set(jnp.asarray(val, x.dtype))
+
+
+@jax.custom_batching.custom_vmap
+def lane_add(x: jax.Array, j, val) -> jax.Array:
+    """``x[j] += val`` whose vmapped form is a lane scatter-add (the sum is
+    formed on the gathered element — identical arithmetic to the one-hot
+    lowering's ``where(hot, x + val, x)`` at the addressed position)."""
+    if x.dtype == jnp.bool_:
+        return x.at[j].set(x[j] | jnp.asarray(val, bool))
+    return x.at[j].set(x[j] + jnp.asarray(val, x.dtype))
+
+
+lane_set.def_vmap(functools.partial(_lane_rule, add=False))
+lane_add.def_vmap(functools.partial(_lane_rule, add=True))

@@ -45,7 +45,8 @@ from .hierarchy import (HierResult, HierTrace, _hier_impl_named,
 from .ranking import POLICIES, PolicyParams
 from .simulator import (SimResult, _behavior_multi, _behavior_static,
                         _result_of_state, _run_chunk, _simulate_impl,
-                        _simulate_multi_impl, resolve_score_mode)
+                        _simulate_multi_impl, batched_update_mode,
+                        resolve_score_mode)
 from .state import init_state
 from .trace import Trace
 
@@ -76,22 +77,24 @@ def _stack(pytrees):
 
 
 @functools.partial(jax.jit, static_argnames=("policy_name", "estimate_z",
-                                             "score_mode", "onehot"))
+                                             "score_mode", "update"))
 def _sweep_single(tstack, caps, keys, pstack, policy_name, estimate_z,
-                  score_mode, onehot):
+                  score_mode, update):
     def point(tr, c, k, pp):
         return _simulate_impl(tr, c, k, policy_name, pp, estimate_z,
-                              score_mode, onehot)
+                              score_mode, update)
 
     inner = jax.vmap(point, in_axes=(None, 0, 0, 0))
     return jax.vmap(lambda tr: inner(tr, caps, keys, pstack))(tstack)
 
 
-@functools.partial(jax.jit, static_argnames=("policy_names", "estimate_z"))
-def _sweep_multi(tstack, caps, keys, lidx, pstack, policy_names, estimate_z):
+@functools.partial(jax.jit, static_argnames=("policy_names", "estimate_z",
+                                             "update"))
+def _sweep_multi(tstack, caps, keys, lidx, pstack, policy_names, estimate_z,
+                 update="lane"):
     def point(tr, c, k, li, pp):
         return _simulate_multi_impl(tr, c, k, li, pp, policy_names,
-                                    estimate_z)
+                                    estimate_z, update=update)
 
     inner = jax.vmap(point, in_axes=(None, 0, 0, 0, 0))
     return jax.vmap(lambda tr: inner(tr, caps, keys, lidx, pstack))(tstack)
@@ -106,12 +109,12 @@ def _sweep_multi(tstack, caps, keys, lidx, pstack, policy_names, estimate_z):
 # (and hence to per-point simulate; tests/test_streaming.py).
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("policy_name", "estimate_z",
-                                             "score_mode", "onehot"),
+                                             "score_mode", "update"),
                    donate_argnums=(0,))
 def _sweep_single_chunk(states, times, objs, z_draw, valid, sizes, pstack,
-                        policy_name, estimate_z, score_mode, onehot):
+                        policy_name, estimate_z, score_mode, update):
     def lane(st, pp, chunk, sz):
-        b = _behavior_static(POLICIES[policy_name], pp, score_mode, onehot)
+        b = _behavior_static(POLICIES[policy_name], pp, score_mode, update)
         return _run_chunk(b, pp, estimate_z, st, sz, chunk)
 
     inner = jax.vmap(lane, in_axes=(0, 0, None, None))
@@ -123,12 +126,13 @@ def _sweep_single_chunk(states, times, objs, z_draw, valid, sizes, pstack,
     return jax.vmap(per_trace)(states, times, objs, z_draw, sizes)
 
 
-@functools.partial(jax.jit, static_argnames=("policy_names", "estimate_z"),
+@functools.partial(jax.jit, static_argnames=("policy_names", "estimate_z",
+                                             "update"),
                    donate_argnums=(0,))
 def _sweep_multi_chunk(states, times, objs, z_draw, valid, sizes, lidx,
-                       pstack, policy_names, estimate_z):
+                       pstack, policy_names, estimate_z, update="lane"):
     def lane(st, li, pp, chunk, sz):
-        b = _behavior_multi(policy_names, li, pp)
+        b = _behavior_multi(policy_names, li, pp, update=update)
         return _run_chunk(b, pp, estimate_z, st, sz, chunk)
 
     inner = jax.vmap(lane, in_axes=(0, 0, 0, None, None))
@@ -141,7 +145,7 @@ def _sweep_multi_chunk(states, times, objs, z_draw, valid, sizes, lidx,
 
 
 def _run_sweep_chunked(tstack, cflat, kflat, lflat, pflat, single,
-                       policy_names, estimate_z, score_mode, onehot,
+                       policy_names, estimate_z, score_mode, update,
                        chunk_size: int) -> SimResult:
     if chunk_size < 1:
         raise ValueError(f"chunk_size={chunk_size} must be >= 1")
@@ -174,10 +178,10 @@ def _run_sweep_chunked(tstack, cflat, kflat, lflat, pflat, single,
                 valid, sizes)
         if single:
             states = _sweep_single_chunk(*args, pflat, policy_names[0],
-                                         estimate_z, score_mode, onehot)
+                                         estimate_z, score_mode, update)
         else:
             states = _sweep_multi_chunk(*args, lflat, pflat, policy_names,
-                                        estimate_z)
+                                        estimate_z, update)
     return _result_of_state(states)
 
 
@@ -242,7 +246,8 @@ def sweep_grid(traces, capacities, policies,
                params=PolicyParams(), seeds=(0,),
                estimate_z: bool = False, use_kernel=False,
                lane_bucket: int | None = None,
-               chunk_size: int | None = None) -> SweepGrid:
+               chunk_size: int | None = None,
+               update: str | None = None) -> SweepGrid:
     """Run the full scenario grid in one compiled call.
 
     traces      — one :class:`Trace` or a sequence of identically-shaped
@@ -263,6 +268,14 @@ def sweep_grid(traces, capacities, policies,
                   the request axis is device-resident one chunk at a time
                   (DESIGN.md §9).  Results are bitwise identical to the
                   unchunked grid.
+    update      — state-update lowering override (DESIGN.md §11).  Default
+                  ``None`` auto-selects: 'scatter' for an unbatched
+                  single-lane grid; for batched lanes, 'lane' (the
+                  diagonal-scatter seam) at large universes and 'onehot'
+                  below the measured crossover
+                  (:data:`repro.core.simulator.LANE_UPDATE_MIN_OBJECTS`).
+                  Every mode is bitwise identical in results
+                  (tests/test_hotpath.py).
 
     Returns a :class:`SweepGrid`; ``result`` fields are
     ``[T, L, P, C, S]``-shaped.  Each point is bitwise identical to the
@@ -281,20 +294,23 @@ def sweep_grid(traces, capacities, policies,
     if not single and resolve_score_mode(use_kernel) != "rank":
         raise ValueError("use_kernel is only supported for single-policy "
                          "sweeps (the kernel specializes eq. 16)")
+    if update is None:
+        # point scatters for an unbatched single lane; once lanes batch,
+        # the N-dependent batched default (DESIGN.md §11)
+        update = batched_update_mode(trace_list[0].n_objects) \
+            if (not single or cflat.shape[0] > 1) else "scatter"
     if chunk_size is not None:
         res = _run_sweep_chunked(tstack, cflat, kflat, lflat, pflat, single,
                                  policy_names, estimate_z,
                                  resolve_score_mode(use_kernel),
-                                 cflat.shape[0] > 1, chunk_size)
+                                 update, chunk_size)
     elif single:
-        # one-hot state updates only when the grid is actually batched —
-        # unbatched scatters are cheaper at large N (DESIGN.md §7)
         res = _sweep_single(tstack, cflat, kflat, pflat, policy_names[0],
                             estimate_z, resolve_score_mode(use_kernel),
-                            cflat.shape[0] > 1)
+                            update)
     else:
         res = _sweep_multi(tstack, cflat, kflat, lflat, pflat, policy_names,
-                           estimate_z)
+                           estimate_z, update)
     res = SimResult(*(x[:, :G].reshape((len(trace_list), L, P, C, S))
                       for x in res))
     return SweepGrid(res, policy_names, tuple(params_list), caps,
@@ -383,8 +399,9 @@ def sweep_hier_grid(traces, n_shards: int, l1_capacities, l2_capacities,
 
     Returns a :class:`HierSweepGrid`; each point is bitwise identical to
     the corresponding :func:`repro.core.hierarchy.simulate_hier` call
-    (tests/test_sweep.py) — the hierarchy body always uses one-hot state
-    updates, so batching never changes per-lane arithmetic.
+    (tests/test_sweep.py) — the hierarchy body always uses a batched
+    update lowering (DESIGN.md §11), so batching never changes per-lane
+    arithmetic.
     """
     trace_list = [traces] if isinstance(traces, HierTrace) else list(traces)
     single, policy_names, params_list = _check_axes(policies, params)

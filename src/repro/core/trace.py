@@ -108,6 +108,30 @@ class RequestStream(NamedTuple):
         return self.sizes.shape[0]
 
 
+def auto_chunk_size(n_requests: int, target: int = 131072) -> int:
+    """Pad-minimizing chunk size for a known-length stream (DESIGN.md §11).
+
+    The streaming engine compiles one scan graph per chunk size and pads
+    the tail chunk to it.  Padded steps are cheap under the gated serve
+    (O(1) no-op writes) but not free — they still execute the step graph —
+    so for a known trace length the best chunk size is the one that makes
+    the tail (nearly) full: the smallest ``c`` with ``ceil(n/c)`` equal to
+    ``k = ceil(n/target)``, i.e. ``c = ceil(n/k)``.  Total padding is then
+    ``< k`` steps (zero whenever ``k`` divides ``n``), vs up to
+    ``target - 1`` for a fixed power-of-two size — at the 1M-request
+    replay the fixed 131072 padded a 106k-step tail, which was most of
+    the recorded PR-4 streaming loss (EXPERIMENTS.md §Perf iteration 6).
+
+    ``target`` bounds per-chunk device residency (~13 B/request of chunk
+    buffers — the [N]-state dominates anyway).
+    """
+    if target < 1:
+        raise ValueError(f"target={target} must be >= 1")
+    n = max(int(n_requests), 1)
+    k = -(-n // int(target))
+    return -(-n // k)
+
+
 def stream_of_trace(trace: Trace) -> RequestStream:
     """View a device :class:`Trace` as a host stream (times widened to f64)."""
     return RequestStream(

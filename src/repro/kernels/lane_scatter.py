@@ -1,0 +1,102 @@
+"""Batched lane-scatter kernel (Pallas, TPU target): point updates with
+lane-varying indices over ``[L, N]`` state.
+
+The simulator's per-object state lives as struct-of-arrays ``[N]``; under
+the sweep engine's lane vmap (policies x params x capacities x seeds) every
+point update carries a *different* index per lane.  Historically that case
+was lowered as a one-hot masked select — O(N) elementwise work per lane per
+update, the measured N=3000 unified-roster loss (EXPERIMENTS.md §Perf
+iteration 5) — because XLA:CPU executes a batched scatter as a per-lane
+loop, which used to be the worse trade at small N.  The lane-update
+discipline here is the MoE dispatch one (in-group scatter with
+lane-varying targets, GShard-style): touch exactly the ``L`` addressed
+elements, never the ``L*N`` table.
+
+This module is the TPU lowering of that discipline: grid over lanes, each
+program copies its row block through VMEM once and patches the addressed
+element with a ``pl.ds`` dynamic store — O(row) VMEM traffic, no [L, N]
+select materialization, and the index arithmetic stays in SMEM.  The jnp
+reference (:func:`repro.kernels.ref.lane_scatter_set_ref` /
+``lane_scatter_add_ref`` — one gather/scatter over the lane diagonal) is
+the CPU fast path and the allclose/bitwise ground truth; interpret mode
+runs the kernel itself on any backend (tests/test_kernels.py pins all
+three against the one-hot oracle across lane counts and dtypes).
+
+Bool state leaves ride through an i32 view: TPU tiling has no native
+1-bit layout, and the set/add semantics are preserved exactly (add on
+bool is logical-or in the callers' usage — the simulator only ever
+set/or's flags).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scatter_kernel(x_ref, idx_ref, val_ref, out_ref, *, add: bool):
+    """One grid step = one lane: copy the row, patch element ``idx``."""
+    row = x_ref[0, :]
+    out_ref[0, :] = row
+    i = idx_ref[0]
+    v = val_ref[pl.ds(0, 1)]
+    if add:
+        v = out_ref[0, pl.ds(i, 1)] + v
+    out_ref[0, pl.ds(i, 1)] = v
+
+
+def _resolve_interpret(interpret) -> bool:
+    """``None`` (the default) compiles on TPU and interprets elsewhere —
+    the same correct-by-default backend rule as ``use_kernel=True``
+    scoring (DESIGN.md §3); pass an explicit bool to force a mode."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def _lane_scatter(x, idx, val, *, add: bool, interpret: bool):
+    lanes, n = x.shape
+    dtype = x.dtype
+    as_i32 = dtype == jnp.bool_
+    if as_i32:
+        x, val = x.astype(jnp.int32), val.astype(jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(_scatter_kernel, add=add),
+        grid=(lanes,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((lanes, n), x.dtype),
+        interpret=interpret,
+    )(x, idx.astype(jnp.int32), val)
+    return out.astype(jnp.bool_) if as_i32 else out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lane_scatter_set(x, idx, val, *, interpret: bool | None = None):
+    """``x[l, idx[l]] = val[l]`` per lane; x ``[L, N]``, idx/val ``[L]``.
+
+    ``interpret=None`` resolves by backend (compiled on TPU, Pallas
+    interpreter elsewhere — :func:`_resolve_interpret`).  Bitwise
+    identical to the one-hot lowering
+    ``vmap(lambda r, j, v: where(arange(N) == j, v, r))`` and to the jnp
+    reference — untouched positions are copied, the addressed position
+    takes ``val`` exactly."""
+    return _lane_scatter(x, idx, jnp.asarray(val, x.dtype), add=False,
+                         interpret=_resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lane_scatter_add(x, idx, val, *, interpret: bool | None = None):
+    """``x[l, idx[l]] += val[l]`` per lane (logical-or for bool ``x``).
+
+    ``interpret`` resolves as in :func:`lane_scatter_set`.  The sum is
+    computed on the gathered element — bit-identical to the one-hot
+    lowering's ``where(hot, x + v, x)`` at the addressed position."""
+    return _lane_scatter(x, idx, jnp.asarray(val, x.dtype), add=True,
+                         interpret=_resolve_interpret(interpret))

@@ -83,6 +83,29 @@ def ranking_scores_ref(lam, z, resid, sizes, cached, omega: float):
     return f, idx, masked[idx]
 
 
+def lane_scatter_set_ref(x, idx, val):
+    """``x[l, idx[l]] = val[l]`` per lane — the jnp oracle (and the CPU
+    fast path) for :mod:`repro.kernels.lane_scatter`.
+
+    One gather/scatter over the lane diagonal: O(L) addressed elements,
+    never the [L, N] one-hot select.  Bitwise identical to the one-hot
+    lowering (untouched positions keep their exact bits; the addressed
+    position takes ``val`` verbatim)."""
+    lanes = jnp.arange(x.shape[0])
+    return x.at[lanes, idx].set(jnp.asarray(val, x.dtype))
+
+
+def lane_scatter_add_ref(x, idx, val):
+    """``x[l, idx[l]] += val[l]`` per lane (see
+    :func:`lane_scatter_set_ref`).  The sum is formed on the gathered
+    element, matching the one-hot ``where(hot, x + v, x)`` bit-for-bit at
+    the addressed position."""
+    lanes = jnp.arange(x.shape[0])
+    if x.dtype == jnp.bool_:
+        return x.at[lanes, idx].set(x[lanes, idx] | jnp.asarray(val, bool))
+    return x.at[lanes, idx].set(x[lanes, idx] + jnp.asarray(val, x.dtype))
+
+
 def victim_order_ref(scores, cached, top: int):
     """Masked ascending victim order — the eviction loop's precomputed diet.
 

@@ -7,7 +7,18 @@ device query.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                # jax >= 0.5 names explicit/auto axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jaxlibs: make_mesh has no axis_types kwarg
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,12 +26,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: 2 pods x 256 = 512 chips (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh():
     """1-device mesh with the production axis names — smoke tests / examples
     run the same sharded code paths without placeholder devices."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((1, 1), ("data", "model"))

@@ -221,3 +221,60 @@ def test_evict_order_property_based():
                                             chunk_size=17))
 
     prop()
+
+
+# ---------------------------------------------------------------------------
+# three-way state-update lowering (DESIGN.md §11): scatter / one-hot / lane
+# must be mutually bitwise-invisible, batched and unbatched
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("update", ["scatter", "onehot", "lane"])
+def test_update_mode_invisible_in_unified_sweep(update):
+    """The unified multi-policy graph under every lowering vs the auto
+    default — the exact graph family the N=3000 canary measures."""
+    trace = _trace(seed=8)
+    names = ["lru", "stoch_vacdh", "lru_mad", "lhd_mad", "adaptsize"]
+    params = [PolicyParams(omega=1.0)]
+    base = sweep_grid(trace, 60.0, names, params, seeds=(0,))
+    got = sweep_grid(trace, 60.0, names, params, seeds=(0,), update=update)
+    _assert_same(base.result, got.result, update)
+
+
+@pytest.mark.parametrize("update", ["onehot", "lane"])
+def test_update_mode_invisible_in_batched_single_sweep(update):
+    """Single-policy grids with a batched capacity axis (where the auto
+    rule flips between lowerings by universe size)."""
+    trace = _trace(seed=9)
+    caps = [40.0, 60.0, 150.0]
+    base = sweep_grid(trace, caps, "stoch_vacdh", [PolicyParams()])
+    got = sweep_grid(trace, caps, "stoch_vacdh", [PolicyParams()],
+                     update=update)
+    _assert_same(base.result, got.result, update)
+    chunked = sweep_grid(trace, caps, "stoch_vacdh", [PolicyParams()],
+                         update=update, chunk_size=251)
+    _assert_same(base.result, chunked.result, f"{update}/chunked")
+
+
+def test_lane_kernel_backend_invisible_end_to_end():
+    """The Pallas lane-scatter kernel (interpret mode) as the lane-path
+    backend, through a real unified sweep — bitwise equal to the jnp
+    diagonal-scatter backend.  The backend flag is read at trace time, so
+    compiled graphs are cleared around the toggle."""
+    from repro.core.state import set_lane_backend
+    trace = _trace(seed=10)
+    names = ["lru", "stoch_vacdh", "lru_mad"]
+    base = sweep_grid(trace, 60.0, names, [PolicyParams()], update="lane")
+    set_lane_backend("kernel_interpret")
+    jax.clear_caches()
+    try:
+        got = sweep_grid(trace, 60.0, names, [PolicyParams()], update="lane")
+    finally:
+        set_lane_backend("scatter")
+        jax.clear_caches()
+    _assert_same(base.result, got.result, "kernel_interpret")
+
+
+def test_batched_update_mode_auto_rule():
+    from repro.core.simulator import (LANE_UPDATE_MIN_OBJECTS,
+                                      batched_update_mode)
+    assert batched_update_mode(LANE_UPDATE_MIN_OBJECTS - 1) == "onehot"
+    assert batched_update_mode(LANE_UPDATE_MIN_OBJECTS) == "lane"

@@ -265,3 +265,79 @@ def test_slstm_gradients_finite():
 
     g = jax.grad(loss)(p)
     assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(g))
+
+
+# ---------------------------------------------------------------------------
+# lane scatter: batched point updates with lane-varying indices (the state
+# update seam's batched lowering — DESIGN.md §11)
+# ---------------------------------------------------------------------------
+def _lane_case(lanes, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    n = 53
+    if dtype == jnp.bool_:
+        x = rng.standard_normal((lanes, n)) > 0
+        val = rng.standard_normal(lanes) > 0
+    else:
+        x = rng.standard_normal((lanes, n)).astype(np.float32)
+        val = rng.standard_normal(lanes).astype(np.float32)
+    idx = rng.integers(0, n, lanes).astype(np.int32)
+    # duplicate-column case: two lanes addressing the same column must not
+    # interfere (each lane owns its row)
+    if lanes > 1:
+        idx[-1] = idx[0]
+    return jnp.asarray(x), jnp.asarray(idx), jnp.asarray(val), n
+
+
+def _onehot_oracle(x, idx, val, n, add):
+    def one(r, j, v):
+        hot = jnp.arange(n) == j
+        if add:
+            new = (r | v) if r.dtype == jnp.bool_ else r + v
+            return jnp.where(hot, new, r)
+        return jnp.where(hot, v, r)
+
+    return jax.vmap(one)(x, idx, val)
+
+
+@pytest.mark.parametrize("lanes", [1, 7, 32])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bool_])
+@pytest.mark.parametrize("add", [False, True])
+def test_lane_scatter_bitwise_matches_onehot(lanes, dtype, add):
+    """Kernel (interpret), jnp ref, and the one-hot oracle must agree
+    bit-for-bit across lane counts and both state dtypes."""
+    from repro.kernels.lane_scatter import lane_scatter_add, lane_scatter_set
+    x, idx, val, n = _lane_case(lanes, dtype)
+    want = np.asarray(_onehot_oracle(x, idx, val, n, add))
+    if add:
+        got_ref = ref.lane_scatter_add_ref(x, idx, val)
+        got_kern = lane_scatter_add(x, idx, val, interpret=True)
+    else:
+        got_ref = ref.lane_scatter_set_ref(x, idx, val)
+        got_kern = lane_scatter_set(x, idx, val, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_ref), want)
+    np.testing.assert_array_equal(np.asarray(got_kern), want)
+
+
+def test_lane_seam_unbatched_and_batched_forms_agree():
+    """state.lane_set/lane_add: the custom_vmap unbatched form (a point
+    scatter) and the vmapped form (the diagonal scatter) must write the
+    same bits — including a shared scalar index (the hierarchy's broadcast
+    request id), which lowers as a column update."""
+    from repro.core.state import lane_add, lane_set
+    x, idx, val, n = _lane_case(7, jnp.float32, seed=3)
+    want_set = _onehot_oracle(x, idx, val, n, add=False)
+    want_add = _onehot_oracle(x, idx, val, n, add=True)
+    got_set = jax.vmap(lane_set)(x, idx, val)
+    got_add = jax.vmap(lane_add)(x, idx, val)
+    np.testing.assert_array_equal(np.asarray(got_set), np.asarray(want_set))
+    np.testing.assert_array_equal(np.asarray(got_add), np.asarray(want_add))
+    # unbatched == row-wise python loop
+    for l in range(7):
+        np.testing.assert_array_equal(
+            np.asarray(lane_set(x[l], idx[l], val[l])),
+            np.asarray(want_set[l]))
+    # shared scalar index under vmap (in_batched=False for j)
+    j = jnp.int32(11)
+    got = jax.vmap(lambda r, v: lane_set(r, j, v))(x, val)
+    want = jax.vmap(lambda r, v: jnp.where(jnp.arange(n) == j, v, r))(x, val)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -326,3 +326,63 @@ def test_long_trace_streaming_smoke():
                         rebase=False)
     b = simulate(trace_of_stream(early), 500.0, "stoch_vacdh")
     _assert_same_result(a, b)
+
+
+# ---------------------------------------------------------------------------
+# double-buffered dispatch + gated padded tails + chunk autotune (§11)
+# ---------------------------------------------------------------------------
+def test_prefetched_stream_bitwise_matches_synchronous_loop():
+    """The double-buffered (prefetch) dispatch order must be bit-for-bit
+    the synchronous chunk loop — it feeds identical arrays to the same
+    compiled graph, rebased and unrebased, padded tail included."""
+    stream = _gap_pattern_stream(2.0 ** 26, T=3000, N=40)
+    for rebase in (True, False):
+        for chunk_size in (512, 1000, 3000):    # 512 -> padded tail
+            a = simulate_stream(stream, 40.0, "stoch_vacdh",
+                                chunk_size=chunk_size, rebase=rebase,
+                                prefetch=True)
+            b = simulate_stream(stream, 40.0, "stoch_vacdh",
+                                chunk_size=chunk_size, rebase=rebase,
+                                prefetch=False)
+            _assert_same_result(a, b)
+
+
+def test_gated_padded_tail_bitwise_matches_single_scan():
+    """Padded tail steps now run the normal step graph with O(1)-gated
+    writes instead of a whole-state select tree; the state crossing the
+    padded boundary must still be bitwise the single-scan state — covered
+    for a GreedyDual policy (gd_h writes) and AdaptSize (coin stream),
+    with a 100-step pad on the tail chunk (only the final chunk is ever
+    padded in this engine)."""
+    trace = _trace(seed=11, n_requests=1100)
+    for policy in ("lhd_mad", "adaptsize", "stoch_vacdh"):
+        base = simulate(trace, 80.0, policy, estimate_z=True)
+        got = simulate_stream(stream_of_trace(trace), 80.0, policy,
+                              estimate_z=True, chunk_size=400, rebase=False)
+        _assert_same_result(base, got)
+
+
+def test_auto_chunk_size_minimizes_padding():
+    from repro.core.trace import auto_chunk_size
+    assert auto_chunk_size(1_000_000) == 125_000          # divides exactly
+    assert auto_chunk_size(100) == 100                    # single chunk
+    assert auto_chunk_size(131_073) == 65_537             # 2 chunks, pad 1
+    assert auto_chunk_size(1, target=131_072) == 1
+    # total pad is always < number of chunks
+    for n in (999_983, 123_457, 65_536, 70_000):
+        c = auto_chunk_size(n)
+        k = -(-n // c)
+        assert k * c - n < k
+    with pytest.raises(ValueError, match="target"):
+        auto_chunk_size(10, target=0)
+
+
+def test_auto_chunk_stream_bitwise_matches_fixed_chunk():
+    trace = _trace(seed=12)
+    base = simulate(trace, 100.0, "stoch_vacdh")
+    got = simulate_stream(stream_of_trace(trace), 100.0, "stoch_vacdh",
+                          chunk_size="auto", rebase=False)
+    _assert_same_result(base, got)
+    got = simulate_stream(stream_of_trace(trace), 100.0, "stoch_vacdh",
+                          chunk_size=None, rebase=False)
+    _assert_same_result(base, got)
