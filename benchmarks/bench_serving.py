@@ -1,0 +1,274 @@
+"""Closed-loop serving benchmark: SLO tail percentiles under adversarial
+open-loop arrivals (DESIGN.md §12).
+
+The streamed replay benchmarks measure *throughput*; the paper's headline
+claim is about user-perceived latency, and delayed hits are a tail
+phenomenon — so this harness drives :class:`repro.serving.engine.ServeEngine`
+(single-tier and hierarchy mode, hedging on/off) with open-loop arrivals
+from the adversarial scenario generators (`repro.data.scenarios`) and
+reports, per config:
+
+* p50 / p95 / p99 / p99.9 user-perceived latency from the bounded-memory
+  streaming quantile sketch (`repro.core.percentile` — million-request
+  runs keep the streaming RSS contract, DESIGN.md §9),
+* the delayed-hit waiter-queue depth distribution (how many requests were
+  already queued on the in-flight fetch each delayed hit joined),
+* sustained req/s at a fixed SLO: the largest arrival-rate multiplier
+  whose measured p99 stays within ``--slo-ms``, found by bounded
+  bisection over time-compressed replays of the same workload.
+
+Structure follows maxtext's decode microbenchmark: an untimed warmup
+segment (cache + estimator state settle), then a profiled measurement
+loop, per-config rows appended to ``BENCH_serving.json`` at the repo root
+with the same sha+date+headline ``history`` schema as BENCH_stream /
+BENCH_sweep (``tools/ci_smoke_perf.py --check-bench`` lints it).
+Measured tables and honest negatives: EXPERIMENTS.md §Serving.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.bench_serving            # default
+    PYTHONPATH=src python -m benchmarks.bench_serving --smoke    # CI-sized
+    PYTHONPATH=src python -m benchmarks.bench_serving --full     # big
+    PYTHONPATH=src python -m benchmarks.run --only serving
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+try:
+    from .common import emit, write_bench_json
+except ImportError:
+    # executed as a plain script (python benchmarks/bench_serving.py):
+    # put the repo root and src/ on the path ourselves
+    import pathlib
+    import sys
+    _root = pathlib.Path(__file__).resolve().parent.parent
+    for p in (str(_root), str(_root / "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    from benchmarks.common import emit, write_bench_json
+
+from repro.core.percentile import StreamingQuantile
+from repro.data.scenarios import make_scenario
+from repro.serving.engine import LatencyModel, ServeEngine
+
+SLO_MS_DEFAULT = 150.0
+WARMUP_FRAC = 0.25
+DEPTH_CAP = 64          # waiter depths >= cap share the overflow bucket
+POLICY = "stoch_vacdh"
+HEADLINE_SCENARIOS = ("flash_crowd", "brownout")
+
+
+def _footprint(w) -> float:
+    """Total token footprint of the distinct keys in the workload."""
+    _, first = np.unique(w.keys, return_index=True)
+    return float(np.sum(w.n_tokens[first], dtype=np.float64))
+
+
+def _make_engine(w, *, hedging: bool, hier: bool, seed: int = 0,
+                 cap_frac: float = 0.25) -> ServeEngine:
+    """Engine under test.  Single tier: one cache sized to ``cap_frac`` of
+    the key footprint, its own (brownout-scaled) latency model.  Hierarchy:
+    a small L1 edge over a shared L2 — only the L2's origin fetches are
+    hedgeable, and both the origin latency and the L1<->L2 hop degrade
+    through the scenario's ``latency_scale`` hook."""
+    foot = _footprint(w)
+    lat = LatencyModel(base_s=0.02, per_token_s=2e-5,
+                       scale_fn=w.latency_scale)
+    size_fn = lambda n: float(n)
+    if not hier:
+        return ServeEngine(capacity=cap_frac * foot, policy=POLICY,
+                           latency=lat, state_size_fn=size_fn,
+                           hedging=hedging, seed=seed)
+    l2 = ServeEngine(capacity=0.5 * foot, policy=POLICY, latency=lat,
+                     state_size_fn=size_fn, hedging=hedging, seed=seed)
+    hop = lambda t: 0.005 * w.latency_scale(t)
+    return ServeEngine(capacity=0.15 * foot, policy=POLICY,
+                       state_size_fn=size_fn, hedging=hedging,
+                       seed=seed + 1, l2=l2, hop_s=hop)
+
+
+def _drive(w, eng, *, rate_scale: float = 1.0, n_limit: int | None = None):
+    """Open-loop replay: warmup segment untimed, measurement segment
+    profiled.  Returns (latency sketch, depth histogram, measured wall
+    seconds, number of measured requests)."""
+    n = w.n_requests if n_limit is None else min(n_limit, w.n_requests)
+    warm = int(WARMUP_FRAC * n)
+    times = w.times / rate_scale
+    keys, toks = w.keys, w.n_tokens
+    sq = StreamingQuantile(rel_err=0.005, min_value=1e-6, max_value=1e5)
+    depth = np.zeros(DEPTH_CAP + 1, np.int64)
+    for i in range(warm):
+        eng.request(float(times[i]), f"p{keys[i]}", int(toks[i]))
+    t0 = time.perf_counter()
+    for i in range(warm, n):
+        before = eng.stats.delayed_hits
+        lat = eng.request(float(times[i]), f"p{keys[i]}", int(toks[i]))
+        sq.add(lat)
+        if eng.stats.delayed_hits > before:
+            depth[min(eng.pending[f"p{keys[i]}"].waiters, DEPTH_CAP)] += 1
+    wall = time.perf_counter() - t0
+    return sq, depth, wall, n - warm
+
+
+def _depth_summary(depth: np.ndarray) -> dict:
+    total = int(depth.sum())
+    if total == 0:
+        return dict(delayed_obs=0, depth_p50=0, depth_p99=0, depth_max=0)
+    cum = np.cumsum(depth)
+    q = lambda p: int(np.searchsorted(cum, p * total))
+    nz = np.nonzero(depth)[0]
+    return dict(delayed_obs=total, depth_p50=q(0.50), depth_p99=q(0.99),
+                depth_max=int(nz[-1]))
+
+
+def _depth_hist(depth: np.ndarray) -> dict:
+    return {str(d): int(c) for d, c in enumerate(depth.tolist()) if c}
+
+
+def req_s_at_slo(w, *, hedging: bool, slo_s: float, n_probe: int,
+                 n_iters: int = 5, seed: int = 0) -> dict:
+    """Largest sustained arrival rate whose p99 meets the SLO.
+
+    Bisects the rate multiplier ``m`` (arrival times compressed by ``m``)
+    over ``[1/8, 8] x`` the scenario's realized mean rate; each probe is a
+    fresh single-tier engine over the first ``n_probe`` requests.  Returns
+    the highest passing multiplier, the implied req/s, and its p99."""
+    base_rate = w.n_requests / max(w.duration, 1e-9)
+    lo, hi = 0.0, None
+    m, best_p99 = 1.0, float("nan")
+    for _ in range(n_iters):
+        eng = _make_engine(w, hedging=hedging, hier=False, seed=seed)
+        sq, _, _, _ = _drive(w, eng, rate_scale=m, n_limit=n_probe)
+        p99 = sq.quantile(0.99)
+        if p99 <= slo_s:
+            lo, best_p99 = m, p99
+            m = min(m * 2.0, 8.0) if hi is None else 0.5 * (m + hi)
+        else:
+            hi = m
+            m = 0.5 * (lo + m) if lo > 0.0 else max(m * 0.5, 0.125)
+        if hi is not None and hi - lo < 0.05:
+            break
+    return dict(slo_ms=round(slo_s * 1e3, 1),
+                rate_mult_at_slo=round(lo, 3),
+                req_s_at_slo=round(lo * base_rate, 1),
+                # None, not NaN: NaN is not valid strict JSON and would
+                # poison BENCH_serving.json for non-Python consumers
+                p99_ms_at_slo=round(best_p99 * 1e3, 3)
+                if lo > 0.0 else None)
+
+
+def run(full: bool = False, smoke: bool = False,
+        slo_ms: float = SLO_MS_DEFAULT, out: str | None = None,
+        seed: int = 0) -> list[dict]:
+    if smoke:
+        scenarios, n_req, n_probe, n_iters = list(HEADLINE_SCENARIOS), 3000, 1500, 3
+    elif full:
+        scenarios = ["diurnal", "flash_crowd", "zipf_drift", "brownout"]
+        n_req, n_probe, n_iters = 30_000, 8000, 5
+    else:
+        scenarios = ["diurnal", "flash_crowd", "zipf_drift", "brownout"]
+        n_req, n_probe, n_iters = 8000, 4000, 5
+    slo_s = slo_ms * 1e-3
+    rows, depth_hists = [], {}
+
+    def one(scenario: str, hier: bool, hedging: bool) -> dict:
+        w = make_scenario(scenario, seed=seed, n_requests=n_req, n_keys=800)
+        eng = _make_engine(w, hedging=hedging, hier=hier, seed=seed)
+        sq, depth, wall, n_meas = _drive(w, eng)
+        s = sq.summary()
+        st = eng.stats
+        cfg = f"{scenario}/{'hier' if hier else 'single'}/" \
+              f"{'hedged' if hedging else 'unhedged'}"
+        depth_hists[cfg] = _depth_hist(depth)
+        row = dict(scenario=scenario, mode="hier" if hier else "single",
+                   hedging=hedging, policy=POLICY, n_requests=n_req,
+                   n_measured=n_meas,
+                   p50_ms=round(s.p50 * 1e3, 3),
+                   p95_ms=round(s.p95 * 1e3, 3),
+                   p99_ms=round(s.p99 * 1e3, 3),
+                   p999_ms=round(s.p999 * 1e3, 3),
+                   mean_ms=round(s.mean * 1e3, 3),
+                   max_ms=round(s.max * 1e3, 3),
+                   hits=st.hits, delayed_hits=st.delayed_hits,
+                   misses=st.misses, hedges=st.hedges,
+                   **_depth_summary(depth),
+                   wall_s=round(wall, 2),
+                   drive_req_per_s=int(n_meas / max(wall, 1e-9)))
+        if eng.l2 is not None:
+            row["l2_hedges"] = eng.l2.stats.hedges
+            row["l2_delayed"] = eng.l2.stats.delayed_hits
+        rows.append(row)
+        return row
+
+    # --- tail percentiles: scenarios x {hedging} x {single, hier} -------
+    for scenario in scenarios:
+        for hedging in (True, False):
+            one(scenario, hier=False, hedging=hedging)
+    hier_scen = scenarios[:1] if smoke else \
+        [s for s in scenarios if s in HEADLINE_SCENARIOS]
+    for scenario in hier_scen:
+        for hedging in (True, False):
+            one(scenario, hier=True, hedging=hedging)
+
+    # --- sustained req/s at the SLO (headline scenarios, single tier) ---
+    for scenario in [s for s in scenarios if s in HEADLINE_SCENARIOS]:
+        for hedging in (True, False):
+            w = make_scenario(scenario, seed=seed, n_requests=n_req,
+                              n_keys=800)
+            r = req_s_at_slo(w, hedging=hedging, slo_s=slo_s,
+                             n_probe=n_probe, n_iters=n_iters, seed=seed)
+            rows.append(dict(scenario=scenario, mode="slo_search",
+                             hedging=hedging, policy=POLICY,
+                             n_requests=n_probe, **r))
+
+    def _pick(scenario, mode, hedging, field):
+        for r in rows:
+            if (r["scenario"], r["mode"], r["hedging"]) == \
+                    (scenario, mode, hedging):
+                return r.get(field)
+        return None
+
+    headline = {k: v for k, v in dict(
+        flash_hedged_p99_ms=_pick("flash_crowd", "single", True, "p99_ms"),
+        flash_unhedged_p99_ms=_pick("flash_crowd", "single", False,
+                                    "p99_ms"),
+        brownout_hedged_p99_ms=_pick("brownout", "single", True, "p99_ms"),
+        brownout_unhedged_p99_ms=_pick("brownout", "single", False,
+                                       "p99_ms"),
+        flash_hedged_req_s_at_slo=_pick("flash_crowd", "slo_search", True,
+                                        "req_s_at_slo"),
+        brownout_hedged_req_s_at_slo=_pick("brownout", "slo_search", True,
+                                           "req_s_at_slo"),
+    ).items() if v is not None}
+
+    write_bench_json("BENCH_serving.json", dict(
+        benchmark="bench_serving",
+        workload=dict(scenarios=scenarios, n_requests=n_req, n_keys=800,
+                      policy=POLICY, slo_ms=slo_ms, warmup_frac=WARMUP_FRAC,
+                      smoke=smoke, full=full, seed=seed),
+        rows=rows,
+        depth_hists=depth_hists,
+    ), path=out, headline=headline)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: 2 scenarios, small traces")
+    ap.add_argument("--slo-ms", type=float, default=SLO_MS_DEFAULT)
+    ap.add_argument("--out", default=None,
+                    help="write the JSON snapshot here instead of "
+                         "BENCH_serving.json at the repo root (CI smoke)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    emit(run(full=args.full, smoke=args.smoke, slo_ms=args.slo_ms,
+             out=args.out, seed=args.seed), "bench_serving")
+
+
+if __name__ == "__main__":
+    main()

@@ -43,8 +43,8 @@ def main() -> int:
                     help="paper-scale sizes (slower)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig3,fig4,fig5,fig6,realworld,"
-                         "kernels,sweep,memory (memory runs only when "
-                         "explicitly selected)")
+                         "kernels,sweep,serving,memory (memory runs only "
+                         "when explicitly selected)")
     ap.add_argument("--no-compile-cache", action="store_true",
                     help="disable the persistent XLA compilation cache")
     args = ap.parse_args()
@@ -52,7 +52,7 @@ def main() -> int:
         _enable_compile_cache()
     want = set(args.only.split(",")) if args.only else None
 
-    from . import (bench_kernels, bench_sweep, fig2_synthetic,
+    from . import (bench_kernels, bench_serving, bench_sweep, fig2_synthetic,
                    fig3_trace_stats, fig4_sensitivity, fig5_real_traces,
                    fig6_hierarchy, fig_realworld)
     from .common import emit
@@ -74,6 +74,9 @@ def main() -> int:
         # BENCH_sweep.json perf-trajectory snapshots at the repo root
         ("sweep", lambda: emit(bench_sweep.run(full=args.full),
                                "bench_sweep")),
+        # closed-loop serving tails: appends BENCH_serving.json history
+        ("serving", lambda: emit(bench_serving.run(full=args.full),
+                                 "bench_serving")),
         # model-stack HLO memory forensics (probe_memory.py).  Runs as a
         # subprocess: the probe must set XLA_FLAGS (512 host devices)
         # before jax initializes, which cannot happen in this process.

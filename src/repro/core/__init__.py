@@ -3,6 +3,7 @@
 - :mod:`delay_stats`   — Theorem 1 & 2 analytic moments + Monte-Carlo oracle.
 - :mod:`distributions` — pluggable miss-latency laws (Deterministic /
                          Exponential / Erlang / Hyperexponential / MC).
+- :mod:`percentile`    — bounded-memory streaming quantile sketch (SLO tails).
 - :mod:`ranking`       — eq. 16 variance-aware ranking + every §5.1 baseline.
 - :mod:`simulator`     — vectorized lax.scan trace simulator.
 - :mod:`hierarchy`     — two-tier sharded L1 -> shared L2 simulator.
@@ -17,6 +18,7 @@ from .distributions import (DISTRIBUTIONS, Deterministic, Erlang, Exponential,
                             make_distribution)
 from .hierarchy import (HierResult, HierTrace, make_hier_trace,
                         simulate_hier, simulate_hier_chunked)
+from .percentile import QuantileSummary, StreamingQuantile
 from .ranking import (BASELINES, OURS, POLICIES, Policy, PolicyParams,
                       Substrate, make_substrate)
 from .simulator import (SimResult, latency_improvement, simulate,
@@ -31,6 +33,7 @@ __all__ = [
     "DISTRIBUTIONS", "Deterministic", "Erlang", "Exponential",
     "Hyperexponential", "MissLatency", "MonteCarlo", "make_distribution",
     "BASELINES", "OURS", "POLICIES", "Policy", "PolicyParams",
+    "QuantileSummary", "StreamingQuantile",
     "Substrate", "make_substrate",
     "HierResult", "HierTrace", "make_hier_trace", "simulate_hier",
     "simulate_hier_chunked",

@@ -26,7 +26,9 @@ Hierarchy mode (DESIGN.md §8): pass a second engine as ``l2`` and this
 engine becomes an L1 edge tier — a miss resolves through the shared L2
 instead of drawing from its own latency model, taking ``hop_s`` plus the
 L2's resolution time (0 on an L2 hit, the residual prefill time on an L2
-delayed hit, an origin draw on an L2 miss).  Delayed-hit waiter queues
+delayed hit, an origin draw on an L2 miss).  ``hop_s`` may be a callable
+of sim time, so a brownout scenario can degrade the edge<->L2 link in
+step with the origin (DESIGN.md §12).  Delayed-hit waiter queues
 compose across tiers exactly as in :mod:`repro.core.hierarchy`; hedging at
 the L1 is disabled (only the L2's origin fetches are hedgeable — an L1
 "fetch" is a queue position at the L2, and duplicating it cannot win).
@@ -45,22 +47,35 @@ from repro.core.state import ObjStats
 
 @dataclasses.dataclass
 class LatencyModel:
-    """Stochastic prefill-latency model: Exp with mean a + b * prefix_len."""
+    """Stochastic prefill-latency model: Exp with mean a + b * prefix_len.
+
+    ``scale_fn`` is the time-varying hook the brownout scenarios thread
+    through (DESIGN.md §12): the mean at sim time ``t`` is multiplied by
+    ``scale_fn(t)``, so correlated origin degradation slows every fetch
+    *issued* inside the episode.  The hedge deadline scales the same way —
+    the predicted p95 tracks the degraded service rate, otherwise every
+    brownout fetch would be trivially (and uselessly) hedged at issue.
+    """
     base_s: float = 0.050
     per_token_s: float = 2e-5
     stochastic: bool = True
     hedge_quantile: float = 0.95
+    scale_fn: Callable[[float], float] | None = None
 
-    def mean(self, n_tokens: int) -> float:
-        return self.base_s + self.per_token_s * n_tokens
+    def mean(self, n_tokens: int, t: float | None = None) -> float:
+        m = self.base_s + self.per_token_s * n_tokens
+        if self.scale_fn is not None and t is not None:
+            m *= self.scale_fn(t)
+        return m
 
-    def draw(self, rng: np.random.Generator, n_tokens: int) -> float:
-        m = self.mean(n_tokens)
+    def draw(self, rng: np.random.Generator, n_tokens: int,
+             t: float | None = None) -> float:
+        m = self.mean(n_tokens, t)
         return float(rng.exponential(m)) if self.stochastic else m
 
-    def hedge_deadline(self, n_tokens: int) -> float:
+    def hedge_deadline(self, n_tokens: int, t: float | None = None) -> float:
         # Exp quantile: -m * ln(1 - q)
-        return -self.mean(n_tokens) * float(np.log(1 - self.hedge_quantile))
+        return -self.mean(n_tokens, t) * float(np.log(1 - self.hedge_quantile))
 
 
 @dataclasses.dataclass
@@ -202,7 +217,8 @@ class ServeEngine:
                  prefill_fn: Callable | None = None,
                  state_size_fn: Callable[[int], float] | None = None,
                  hedging: bool = True, seed: int = 0,
-                 l2: "ServeEngine | None" = None, hop_s: float = 0.0):
+                 l2: "ServeEngine | None" = None,
+                 hop_s: "float | Callable[[float], float]" = 0.0):
         self.cache = DelayedHitPrefixCache(capacity, policy, params)
         self.latency = latency or LatencyModel()
         self.prefill_fn = prefill_fn           # real-model hook (optional)
@@ -220,9 +236,13 @@ class ServeEngine:
     def _commit_due(self, t: float) -> None:
         while self.events and self.events[0][0] <= t:
             t_c, _, key = heapq.heappop(self.events)
-            e = self.pending.pop(key, None)
+            e = self.pending.get(key)
             if e is None or t_c != e.complete_t:
-                continue                      # stale (hedged duplicate lost)
+                # stale (hedged duplicate lost, or the key re-missed and a
+                # newer fetch owns the entry): drop the EVENT only — the
+                # pending entry, if any, belongs to the newer fetch
+                continue
+            del self.pending[key]
             if self.prefill_fn is not None:
                 e.state = self.prefill_fn(key, e.n_tokens)
             self.cache.admit(e, t_c, self.stats)
@@ -246,15 +266,21 @@ class ServeEngine:
         # miss: issue the prefill "fetch" — in hierarchy mode its duration
         # is hop + the shared L2's resolution time, so L1 waiters queue on a
         # completion that embeds the L2's own delayed-hit queueing.
+        loser_comp = None
         if self.l2 is not None:
-            z = self.hop_s + self.l2.request(t, prefix_key, n_tokens)
+            hop = self.hop_s(t) if callable(self.hop_s) else self.hop_s
+            z = hop + self.l2.request(t, prefix_key, n_tokens)
         else:
-            z = self.latency.draw(self.rng, n_tokens)
+            z = self.latency.draw(self.rng, n_tokens, t)
             if self.hedging:
-                deadline = self.latency.hedge_deadline(n_tokens)
+                deadline = self.latency.hedge_deadline(n_tokens, t)
                 if z > deadline:
-                    z2 = self.latency.draw(self.rng, n_tokens)
+                    z2 = self.latency.draw(self.rng, n_tokens, t)
                     z_h = deadline + z2
+                    # both copies race; the served latency is the winner
+                    # min(Z1, t_hedge + Z2') and the loser's completion
+                    # event stays queued — _commit_due drops it as stale.
+                    loser_comp = t + max(z, z_h)
                     if z_h < z:
                         z = z_h
                     self.stats.hedges += 1
@@ -269,6 +295,9 @@ class ServeEngine:
         self.pending[prefix_key] = entry
         self._seq += 1
         heapq.heappush(self.events, (comp, self._seq, prefix_key))
+        if loser_comp is not None and loser_comp > comp:
+            self._seq += 1
+            heapq.heappush(self.events, (loser_comp, self._seq, prefix_key))
         self.stats.misses += 1
         self.stats.prefill_tokens += n_tokens
         self.stats.total_latency += z

@@ -1,0 +1,84 @@
+"""Closed-loop serving benchmark harness: fast unit checks + a slow
+end-to-end smoke that validates the emitted BENCH_serving schema against
+the same lint CI applies (tools/ci_smoke_perf.py --check-bench).
+"""
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import bench_serving  # noqa: E402
+from repro.data.scenarios import make_scenario  # noqa: E402
+from tools.ci_smoke_perf import _check_history, _serving_canary  # noqa: E402
+
+
+def test_footprint_counts_each_key_once():
+    w = make_scenario("zipf_drift", seed=0, n_requests=1000, n_keys=50)
+    foot = bench_serving._footprint(w)
+    _, first = np.unique(w.keys, return_index=True)
+    assert foot == float(np.sum(w.n_tokens[first], dtype=np.float64))
+    assert foot < float(np.sum(w.n_tokens, dtype=np.float64))
+
+
+def test_depth_summary_and_hist():
+    depth = np.zeros(bench_serving.DEPTH_CAP + 1, np.int64)
+    depth[1], depth[2], depth[7] = 90, 9, 1
+    s = bench_serving._depth_summary(depth)
+    assert s["delayed_obs"] == 100
+    assert s["depth_p50"] == 1
+    assert s["depth_p99"] == 2
+    assert s["depth_max"] == 7
+    h = bench_serving._depth_hist(depth)
+    assert h == {"1": 90, "2": 9, "7": 1}
+    empty = bench_serving._depth_summary(np.zeros(5, np.int64))
+    assert empty["delayed_obs"] == 0 and empty["depth_max"] == 0
+
+
+def test_drive_records_only_measured_segment():
+    w = make_scenario("flash_crowd", seed=1, n_requests=400, n_keys=40)
+    eng = bench_serving._make_engine(w, hedging=False, hier=False)
+    sq, depth, wall, n_meas = bench_serving._drive(w, eng)
+    warm = int(bench_serving.WARMUP_FRAC * 400)
+    assert n_meas == 400 - warm
+    assert sq.count == n_meas
+    assert wall >= 0.0
+    assert int(depth.sum()) <= eng.stats.delayed_hits
+
+
+def test_hier_engine_shares_one_l2_and_scales_hop():
+    w = make_scenario("brownout", seed=2, n_requests=300, n_keys=30)
+    eng = bench_serving._make_engine(w, hedging=True, hier=True)
+    assert eng.l2 is not None
+    assert callable(eng.hop_s)
+    d = w.duration
+    # hop degrades inside the brownout window exactly like the origin
+    assert eng.hop_s(0.35 * d) == pytest.approx(
+        0.005 * w.latency_scale(0.35 * d))
+
+
+@pytest.mark.slow
+def test_bench_serving_smoke_end_to_end(tmp_path):
+    """The CI-sized benchmark run end-to-end: >= 2 scenarios x hedging
+    on/off, SLO-search rows, hierarchy rows, and a JSON snapshot that
+    passes the --check-bench serving canary + history lint."""
+    out = tmp_path / "bench_serving_smoke.json"
+    rows = bench_serving.run(smoke=True, out=str(out))
+    payload = json.loads(out.read_text())
+    assert payload["benchmark"] == "bench_serving"
+    assert _serving_canary(payload)
+    _check_history(payload, "bench_serving_smoke")
+    single = [r for r in rows if r["mode"] == "single"]
+    assert {(r["scenario"], r["hedging"]) for r in single} == {
+        (s, h) for s in bench_serving.HEADLINE_SCENARIOS
+        for h in (True, False)}
+    for r in single:
+        assert r["p50_ms"] <= r["p95_ms"] <= r["p99_ms"] <= r["p999_ms"]
+        assert r["hits"] + r["delayed_hits"] + r["misses"] == r["n_requests"]
+    slo = [r for r in rows if r["mode"] == "slo_search"]
+    assert len(slo) == 4
+    for r in slo:
+        assert r["req_s_at_slo"] >= 0.0

@@ -1,0 +1,124 @@
+"""Streaming quantile sketch: exactness, error bound, merge associativity.
+
+The serving benchmark's accuracy contract (DESIGN.md §12): exact quantiles
+below ``exact_n`` samples, relative error <= ``rel_err`` above, and merges
+that are exactly associative so chunked replays report the same tail as
+monolithic ones.
+"""
+import functools
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.percentile import StreamingQuantile
+
+QS = (0.0, 0.1, 0.5, 0.9, 0.95, 0.99, 0.999, 1.0)
+
+
+def _merged(chunks, **kw):
+    return functools.reduce(lambda a, b: a.merge(b),
+                            (StreamingQuantile(**kw).add(c) for c in chunks))
+
+
+def test_small_sample_is_exact_np_percentile():
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 7, 100, 512):
+        x = rng.lognormal(0.0, 1.5, n)
+        sq = StreamingQuantile(exact_n=512).add(x)
+        for q in QS:
+            assert sq.quantile(q) == float(np.percentile(x, q * 100.0)), \
+                (n, q)
+
+
+def test_large_heavy_tailed_within_documented_tolerance():
+    """Pareto(1.5) — the documented rel_err bound must hold at every
+    reported quantile, including deep tails."""
+    rng = np.random.default_rng(1)
+    x = rng.pareto(1.5, 300_000) + 1e-3
+    rel = 0.01
+    sq = StreamingQuantile(rel_err=rel).add(x)
+    for q in (0.5, 0.9, 0.95, 0.99, 0.999, 0.9999):
+        true = float(np.percentile(x, q * 100.0))
+        est = sq.quantile(q)
+        # bucket-midpoint guarantee + interpolation slack on the true side
+        assert abs(est - true) / true < rel * 1.6, (q, est, true)
+
+
+def test_merge_exactly_associative_and_equals_monolithic():
+    """(A+B)+C vs A+(B+C) vs one pass: identical histogram state and
+    bitwise-identical quantiles — chunked == monolithic tails."""
+    rng = np.random.default_rng(2)
+    x = np.concatenate([rng.lognormal(0, 2, 40_000),
+                        np.zeros(100), rng.pareto(1.2, 10_000)])
+    a, b, c = np.array_split(x, 3)
+    mk = lambda v: StreamingQuantile().add(v)
+    left = mk(a).merge(mk(b)).merge(mk(c))
+    right = mk(a).merge(mk(b).merge(mk(c)))
+    mono = mk(x)
+    for m in (left, right):
+        assert np.array_equal(m.counts, mono.counts)
+        assert m.zero_count == mono.zero_count
+        assert (m.count, m.min, m.max) == (mono.count, mono.min, mono.max)
+        for q in QS:
+            assert m.quantile(q) == mono.quantile(q)
+
+
+def test_merge_below_exact_n_stays_exact():
+    rng = np.random.default_rng(3)
+    a, b = rng.exponential(1.0, 100), rng.exponential(5.0, 150)
+    m = _merged([a, b])
+    both = np.concatenate([a, b])
+    for q in QS:
+        assert m.quantile(q) == float(np.percentile(both, q * 100.0))
+
+
+def test_merge_spill_happens_exactly_at_crossing():
+    """Two sub-exact_n sketches whose union crosses the buffer: the merge
+    must land in the histogram regime and still match a monolithic add."""
+    rng = np.random.default_rng(4)
+    a, b = rng.lognormal(0, 1, 300), rng.lognormal(1, 1, 300)
+    m = _merged([a, b])
+    mono = StreamingQuantile().add(np.concatenate([a, b]))
+    assert not m._buf and not mono._buf         # both spilled
+    assert np.array_equal(m.counts, mono.counts)
+
+
+def test_zero_and_negative_values_share_zero_bucket():
+    sq = StreamingQuantile(exact_n=4)
+    sq.add([0.0, 0.0, -1e-30, 1.0, 2.0, 3.0])   # crosses exact_n -> spills
+    assert sq.zero_count == 3
+    assert sq.quantile(0.0) == 0.0
+    assert sq.count == 6
+
+
+def test_empty_and_edge_quantiles():
+    sq = StreamingQuantile()
+    assert math.isnan(sq.quantile(0.5))
+    assert math.isnan(sq.mean)
+    sq.add(2.5)
+    assert sq.quantile(0.0) == sq.quantile(1.0) == 2.5
+    with pytest.raises(ValueError):
+        sq.quantile(1.5)
+
+
+def test_geometry_mismatch_rejected():
+    with pytest.raises(ValueError):
+        StreamingQuantile(rel_err=0.01).merge(StreamingQuantile(rel_err=0.02))
+
+
+def test_clamping_at_dynamic_range_edges():
+    sq = StreamingQuantile(min_value=1e-3, max_value=1e3, exact_n=2)
+    sq.add([1e-6, 1e6, 5.0])                    # spilled: clamped buckets
+    # quantile answers stay inside the *observed* min/max
+    assert sq.quantile(0.0) >= 1e-6
+    assert sq.quantile(1.0) <= 1e6
+
+
+def test_summary_fields_round_trip():
+    x = np.random.default_rng(5).exponential(0.1, 10_000)
+    s = StreamingQuantile().add(x).summary()
+    assert s.count == 10_000
+    assert s.p50 <= s.p95 <= s.p99 <= s.p999 <= s.max
+    d = s.as_dict(scale=1e3)
+    assert d["count"] == 10_000 and d["p99"] == round(s.p99 * 1e3, 4)

@@ -1,0 +1,175 @@
+"""Property tests for the adversarial serving scenario generators.
+
+The generators feed the closed-loop serving benchmark (DESIGN.md §12);
+their statistical promises are the properties pinned here:
+
+* arrival-mass conservation — realized request count matches the integral
+  of the nominal rate over the realized horizon (Poisson concentration),
+* bitwise seed reproducibility for every generator,
+* monotone Zipf-drift skew (schedule by construction, head mass
+  empirically),
+* flash-crowd burst mass exactly bounded by the configured fraction,
+* non-negative, sorted timestamps for every generator.
+
+``hypothesis`` is an optional test dependency (like tests/test_properties
+.py): without it this module skips instead of failing collection.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.data.scenarios import (SCENARIOS, BrownoutSpec, DiurnalSpec,
+                                  FlashCrowdSpec, ZipfDriftSpec,
+                                  make_scenario)
+
+_settings = dict(deadline=None, max_examples=10)
+_N = 4000          # requests per generated property example (numpy-fast)
+
+
+# --- every generator: timestamps + determinism -------------------------
+@given(name=st.sampled_from(sorted(SCENARIOS)), seed=st.integers(0, 2**16))
+@settings(**_settings)
+def test_timestamps_sorted_and_non_negative(name, seed):
+    w = make_scenario(name, seed=seed, n_requests=_N)
+    assert w.times.dtype == np.float64
+    assert w.n_requests == w.times.shape[0] == w.keys.shape[0] \
+        == w.n_tokens.shape[0] == w.burst_mask.shape[0]
+    assert float(w.times[0]) >= 0.0
+    assert bool(np.all(np.diff(w.times) >= 0.0))
+    assert bool(np.all(w.keys >= 0))
+    assert bool(np.all(w.n_tokens > 0))
+
+
+@given(name=st.sampled_from(sorted(SCENARIOS)), seed=st.integers(0, 2**16))
+@settings(**_settings)
+def test_bitwise_seed_reproducibility(name, seed):
+    a = make_scenario(name, seed=seed, n_requests=_N)
+    b = make_scenario(name, seed=seed, n_requests=_N)
+    assert np.array_equal(a.times, b.times)
+    assert np.array_equal(a.keys, b.keys)
+    assert np.array_equal(a.n_tokens, b.n_tokens)
+    assert np.array_equal(a.burst_mask, b.burst_mask)
+    # the latency hook is part of the contract too
+    probe = np.linspace(0.0, a.duration, 23)
+    assert [a.latency_scale(t) for t in probe] \
+        == [b.latency_scale(t) for t in probe]
+
+
+@given(name=st.sampled_from(sorted(SCENARIOS)), seed=st.integers(0, 2**10))
+@settings(**_settings)
+def test_different_seeds_differ(name, seed):
+    a = make_scenario(name, seed=seed, n_requests=_N)
+    b = make_scenario(name, seed=seed + 1, n_requests=_N)
+    assert not np.array_equal(a.times, b.times)
+
+
+# --- arrival-mass conservation -----------------------------------------
+@given(seed=st.integers(0, 2**16), amplitude=st.floats(0.0, 0.85),
+       period=st.floats(5.0, 120.0))
+@settings(**_settings)
+def test_diurnal_arrival_mass_conserves_nominal_rate(seed, amplitude,
+                                                     period):
+    """Exact time-rescaling: N(0, T] is Poisson(Lambda(T)), so the realized
+    count stays within normal concentration of the rate integral."""
+    spec = DiurnalSpec(n_requests=_N, amplitude=amplitude, period=period)
+    w = spec.generate(seed=seed)
+    mass = float(spec.rate_integral(w.duration))
+    assert abs(w.n_requests - mass) <= 6.0 * np.sqrt(mass) + 1.0
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**_settings)
+def test_stationary_generators_mass_conservation(seed):
+    """Homogeneous scenarios: realized mean rate ~= nominal rate."""
+    for spec in (ZipfDriftSpec(n_requests=_N), BrownoutSpec(n_requests=_N)):
+        w = spec.generate(seed=seed)
+        mass = spec.rate * w.duration
+        assert abs(w.n_requests - mass) <= 6.0 * np.sqrt(mass) + 1.0
+
+
+# --- flash crowds -------------------------------------------------------
+@given(seed=st.integers(0, 2**16), frac=st.floats(0.0, 0.4),
+       n_bursts=st.integers(1, 6))
+@settings(**_settings)
+def test_flash_crowd_burst_mass_bounded_by_fraction(seed, frac, n_bursts):
+    spec = FlashCrowdSpec(n_requests=_N, burst_fraction=frac,
+                          n_bursts=n_bursts)
+    w = spec.generate(seed=seed)
+    n_burst = int(w.burst_mask.sum())
+    assert n_burst == int(frac * _N)            # exact by construction
+    assert n_burst <= frac * _N
+    assert w.n_requests == _N                   # bursts ride inside the total
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**_settings)
+def test_flash_crowd_bursts_are_concentrated(seed):
+    """Burst requests hit few keys inside short windows — the adversarial
+    property that makes them delayed-hit storms."""
+    spec = FlashCrowdSpec(n_requests=_N, burst_fraction=0.2, n_bursts=2,
+                          burst_duration=0.3, hot_per_burst=3)
+    w = spec.generate(seed=seed)
+    bk = w.keys[w.burst_mask]
+    assert np.unique(bk).size <= spec.n_bursts * spec.hot_per_burst
+    # each burst's span is bounded by its window length
+    bt = np.sort(w.times[w.burst_mask])
+    gaps = np.diff(bt)
+    # two bursts -> at most one inter-burst gap larger than a window
+    assert int(np.sum(gaps > spec.burst_duration)) <= spec.n_bursts - 1
+
+
+# --- Zipf drift ---------------------------------------------------------
+def test_zipf_drift_schedule_monotone():
+    up = ZipfDriftSpec(alpha_start=0.4, alpha_end=1.4).alpha_schedule()
+    assert bool(np.all(np.diff(up) >= 0.0))
+    down = ZipfDriftSpec(alpha_start=1.2, alpha_end=0.6).alpha_schedule()
+    assert bool(np.all(np.diff(down) <= 0.0))
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**_settings)
+def test_zipf_drift_skew_monotone_in_head_mass(seed):
+    """With alpha rising 0.4 -> 1.4, the head keys' share of requests must
+    grow from the first quarter of the trace to the last."""
+    w = ZipfDriftSpec(n_requests=20_000, n_keys=500, alpha_start=0.4,
+                      alpha_end=1.4).generate(seed=seed)
+    q = w.n_requests // 4
+    head = lambda k: float(np.mean(k < 10))
+    assert head(w.keys[-q:]) > head(w.keys[:q]) + 0.05
+
+
+# --- brownouts ----------------------------------------------------------
+@given(seed=st.integers(0, 2**16), severity=st.floats(1.5, 10.0))
+@settings(**_settings)
+def test_brownout_scale_hook_piecewise(seed, severity):
+    spec = BrownoutSpec(n_requests=_N, severity=severity,
+                        episodes=((0.2, 0.1), (0.6, 0.2)))
+    w = spec.generate(seed=seed)
+    d = w.duration
+    assert w.latency_scale(0.0) == 1.0
+    assert w.latency_scale(0.25 * d) == severity
+    assert w.latency_scale(0.45 * d) == 1.0
+    assert w.latency_scale(0.7 * d) == severity
+    assert w.latency_scale(0.95 * d) == 1.0
+    # episode mass: fraction of requests inside brownout windows is close
+    # to the configured 0.3 of the horizon (arrivals are stationary)
+    inside = np.zeros(w.n_requests, bool)
+    for s, dur in spec.episodes:
+        inside |= (w.times >= s * d) & (w.times < (s + dur) * d)
+    assert abs(float(inside.mean()) - 0.3) < 0.1
+
+
+def test_unknown_scenario_rejected():
+    with pytest.raises(KeyError):
+        make_scenario("nope")
+
+
+def test_bad_spec_params_rejected():
+    with pytest.raises(ValueError):
+        DiurnalSpec(amplitude=1.5).generate()
+    with pytest.raises(ValueError):
+        FlashCrowdSpec(burst_fraction=1.0).generate()
+    with pytest.raises(ValueError):
+        BrownoutSpec(severity=0.0).generate()

@@ -168,6 +168,132 @@ def test_engine_hierarchy_warm_l2_serves_fast_refetch():
     assert l2.stats.hits == 1
 
 
+def test_hedged_miss_enqueues_loser_event_then_drops_it_stale():
+    """A hedged fetch issues TWO completion events (winner + loser); the
+    loser must be dropped by _commit_due's stale guard, committing the
+    entry exactly once."""
+    lm = LatencyModel(base_s=0.2, per_token_s=0.0, stochastic=True)
+    saw_hedge = False
+    for seed in range(40):
+        eng = ServeEngine(capacity=10.0, policy="lru", latency=lm,
+                          state_size_fn=lambda n: 1.0, hedging=True,
+                          seed=seed)
+        eng.request(0.0, "k", 10)
+        if not eng.stats.hedges:
+            assert len(eng.events) == 1
+            continue
+        saw_hedge = True
+        assert len(eng.events) == 2
+        eng.request(1e9, "other", 10)     # drains both events
+        assert "k" not in eng.pending
+        i = eng.cache.key_to_idx["k"]
+        assert bool(eng.cache.obj.cached[i])
+        assert not bool(eng.cache.obj.in_flight[i])
+        # exactly one admission: occupancy = k + other's in-flight zero
+        assert eng.cache.free == pytest.approx(9.0)
+    assert saw_hedge
+
+
+def test_stale_event_does_not_destroy_newer_pending_entry():
+    """Regression (the bench_serving KeyError): a hedged loser event that
+    fires AFTER its key re-missed must not evict the newer fetch's pending
+    entry — a later delayed hit would otherwise find in_flight set with no
+    pending entry."""
+    from repro.serving.engine import PrefixEntry
+    eng = ServeEngine(capacity=10.0, policy="lru",
+                      latency=LatencyModel(base_s=1.0, per_token_s=0.0,
+                                           stochastic=False),
+                      state_size_fn=lambda n: 1.0, hedging=False)
+    lat0 = eng.request(0.0, "k", 10)          # miss, completes at t=1
+    assert lat0 == pytest.approx(1.0)
+    # inject a stale duplicate event (as a lost hedge would leave behind)
+    import heapq
+    eng._seq += 1
+    heapq.heappush(eng.events, (0.5, eng._seq, "k"))
+    lat1 = eng.request(0.6, "k", 10)          # pops the stale event first
+    assert "k" in eng.pending                 # newer entry survived
+    assert lat1 == pytest.approx(0.4)         # delayed hit on the real fetch
+    assert eng.stats.delayed_hits == 1
+    assert eng.request(2.0, "k", 10) == 0.0   # real completion committed
+    assert eng.stats.hits == 1
+
+
+def test_hedged_loser_after_re_miss_keeps_queue_consistent():
+    """End-to-end version of the stale-drop regression: with an engine
+    whose admissions always fail (size > capacity), a hedged loser event
+    interleaves with a re-miss of the same key; subsequent delayed hits
+    must still find their pending entry."""
+    lm = LatencyModel(base_s=0.3, per_token_s=0.0, stochastic=True)
+    exercised = 0
+    for seed in range(60):
+        eng = ServeEngine(capacity=1.0, policy="lru", latency=lm,
+                          state_size_fn=lambda n: 2.0,  # never admissible
+                          hedging=True, seed=seed)
+        eng.request(0.0, "k", 10)
+        if not eng.stats.hedges:
+            continue
+        (w_t, _, _), (l_t, _, _) = sorted(eng.events)[:2]
+        # re-miss between winner and loser, then touch after the loser:
+        # the stale loser event must not destroy the re-miss's entry
+        eng.request(0.5 * (w_t + l_t), "k", 10)
+        eng.request(l_t + 1e-6, "k", 10)      # delayed hit or fresh miss
+        assert ("k" in eng.pending) == bool(
+            eng.cache.obj.in_flight[eng.cache.key_to_idx["k"]])
+        exercised += 1
+    assert exercised > 0
+
+
+def test_hierarchy_hedging_disabled_at_l1_only_l2_origin_hedges():
+    """In hierarchy mode the L1's 'fetch' is a queue position at the L2 —
+    duplicating it cannot win, so hedging must stay off at the L1 even
+    when requested, while the L2's origin fetches hedge normally."""
+    lm = LatencyModel(base_s=0.2, per_token_s=0.0, stochastic=True)
+    l2 = ServeEngine(capacity=1.0, policy="lru", latency=lm,
+                     state_size_fn=lambda n: 2.0,    # L2 never admits
+                     hedging=True, seed=11)
+    l1 = ServeEngine(capacity=1.0, policy="lru",
+                     state_size_fn=lambda n: 2.0,    # L1 never admits
+                     hedging=True,                   # requested, but inert
+                     l2=l2, hop_s=0.01, seed=12)
+    for i, t in enumerate(np.arange(0.0, 30.0, 0.05)):
+        l1.request(float(t), f"k{i}", 10)            # all unique -> misses
+    assert l1.stats.hedges == 0
+    assert l2.stats.hedges > 0
+    assert l2.stats.misses == l1.stats.misses
+
+
+def test_latency_scale_hook_scales_mean_and_hedge_deadline():
+    """The brownout hook (DESIGN.md §12): mean and hedge deadline at issue
+    time t are both multiplied by scale_fn(t)."""
+    scale = lambda t: 5.0 if 10.0 <= t < 20.0 else 1.0
+    lm = LatencyModel(base_s=1.0, per_token_s=0.0, stochastic=False,
+                      scale_fn=scale)
+    assert lm.mean(10, t=0.0) == pytest.approx(1.0)
+    assert lm.mean(10, t=15.0) == pytest.approx(5.0)
+    assert lm.hedge_deadline(10, t=15.0) == pytest.approx(
+        5.0 * lm.hedge_deadline(10, t=0.0))
+    assert lm.mean(10) == pytest.approx(1.0)      # no t: hook bypassed
+    eng = ServeEngine(capacity=100.0, policy="lru", latency=lm,
+                      state_size_fn=lambda n: 1.0, hedging=False)
+    assert eng.request(0.0, "a", 10) == pytest.approx(1.0)
+    assert eng.request(15.0, "b", 10) == pytest.approx(5.0)
+    assert eng.request(25.0, "c", 10) == pytest.approx(1.0)
+
+
+def test_hierarchy_hop_callable_composes_with_brownout():
+    """hop_s may be time-varying: an L1 miss at t pays hop_s(t) plus the
+    L2 resolution — the hierarchy leg of the brownout composition."""
+    det = LatencyModel(base_s=1.0, per_token_s=0.0, stochastic=False)
+    l2 = ServeEngine(capacity=100.0, policy="lru", latency=det,
+                     state_size_fn=lambda n: 1.0, hedging=False)
+    l1 = ServeEngine(capacity=1.0, policy="lru",
+                     state_size_fn=lambda n: 2.0,    # never L1-admissible
+                     l2=l2, hop_s=lambda t: 0.01 if t < 5.0 else 0.07)
+    assert l1.request(0.0, "p", 10) == pytest.approx(1.01)
+    # warm L2 after t=1; second L1 miss pays only the (degraded) hop
+    assert l1.request(6.0, "p", 10) == pytest.approx(0.07)
+
+
 def _stub_steps(next_token):
     """(prefill, decode) stubs emitting argmax == next_token(pos)."""
     def logits_for(tok):

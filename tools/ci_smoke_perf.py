@@ -13,11 +13,13 @@ Override the floor / output path via ``--floor`` / ``--out``
 (``--floor 0`` records without asserting).
 
 ``--check-bench`` instead lints the repo-root perf-trajectory snapshots
-(``BENCH_stream.json`` / ``BENCH_sweep.json``): schema keys present,
-history entries well-formed (sha + date + at least one numeric headline),
-and the canary rows that future PRs diff against (the N=3000 roster pair,
-the streamed-vs-device stoch_vacdh pair) actually exist — so a benchmark
-refactor cannot silently stop recording the trajectory.
+(``BENCH_stream.json`` / ``BENCH_sweep.json`` / ``BENCH_serving.json``):
+schema keys present, history entries well-formed (sha + date + at least
+one numeric headline), and the canary rows that future PRs diff against
+(the N=3000 roster pair, the streamed-vs-device stoch_vacdh pair, the
+serving benchmark's scenario x hedging tail grid with its SLO-search and
+hierarchy rows) actually exist — so a benchmark refactor cannot silently
+stop recording the trajectory.
 
 Usage: PYTHONPATH=src python tools/ci_smoke_perf.py [--floor REQ_S]
        PYTHONPATH=src python tools/ci_smoke_perf.py --check-bench
@@ -60,6 +62,28 @@ def _check_history(payload: dict, name: str) -> None:
             _fail(f"{name}: history[{i}] has no numeric headline field")
 
 
+def _serving_canary(p: dict) -> bool:
+    """The serving tail grid: >= 2 scenarios x {hedging on, off} single-tier
+    rows with numeric p50/p99, plus hierarchy-mode and SLO-search rows —
+    the surface every future SLO/robustness claim is measured on."""
+    rows = p.get("rows", [])
+    single = {(r.get("scenario"), r.get("hedging")) for r in rows
+              if r.get("mode") == "single"
+              and isinstance(r.get("p50_ms"), (int, float))
+              and isinstance(r.get("p99_ms"), (int, float))
+              and isinstance(r.get("p999_ms"), (int, float))}
+    scenarios = {s for s, _ in single}
+    both_hedge = {s for s in scenarios
+                  if (s, True) in single and (s, False) in single}
+    return (len(both_hedge) >= 2
+            and any(r.get("mode") == "hier" for r in rows)
+            and any(r.get("mode") == "slo_search"
+                    and isinstance(r.get("req_s_at_slo"), (int, float))
+                    for r in rows)
+            and isinstance(p.get("depth_hists"), dict)
+            and len(p["depth_hists"]) > 0)
+
+
 def check_bench_schemas(root: Path = REPO_ROOT) -> None:
     """Validate the repo-root BENCH_*.json trajectory files (see module
     docstring).  Raises SystemExit with a message on the first violation."""
@@ -70,6 +94,7 @@ def check_bench_schemas(root: Path = REPO_ROOT) -> None:
         ("BENCH_sweep.json",
          lambda p: {r.get("name") for r in p.get("rows", [])}
          >= {"roster3000_unified", "roster3000_sequential"}),
+        ("BENCH_serving.json", _serving_canary),
     ):
         path = root / fname
         if not path.exists():
