@@ -16,6 +16,27 @@ POLICY_SET = ["lru", "lfu", "lhd", "adaptsize", "lru_mad", "lhd_mad",
               "lac", "cala", "vacdh", "lrb_lite", "stoch_vacdh"]
 
 
+def forced_device_env(n: int) -> dict:
+    """Subprocess env with ``n`` fake host CPU devices forced via XLA_FLAGS.
+
+    The multi-device sweep fabric (repro.launch.fabric, DESIGN.md §13) is
+    validated on CPU by faking devices, and the flag only works if set
+    before jax initializes — so multi-device measurement always happens in
+    a child process (the ``benchmarks/probe_memory.py`` pattern).  Any
+    pre-existing device-count flag is replaced outright (a stale count
+    surfaces much later as a confusing mesh error); other XLA flags are
+    kept."""
+    import os
+    import re
+    env = dict(os.environ)
+    prior = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                   env.get("XLA_FLAGS", "")).strip()
+    flag = f"--xla_force_host_platform_device_count={n}"
+    env["XLA_FLAGS"] = f"{prior} {flag}".strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
 def _git_sha() -> str:
     """Short HEAD sha, suffixed '-dirty' when the working tree differs —
     a history entry must never attribute uncommitted code's numbers to a

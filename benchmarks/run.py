@@ -20,8 +20,13 @@ from pathlib import Path
 
 def _enable_compile_cache() -> None:
     import jax
+    import os
     try:
-        cache = Path(__file__).parent / ".jax_cache"
+        # honor an externally pinned cache dir (CI's JAX_COMPILATION_CACHE_DIR)
+        # instead of clobbering it; the default lives under benchmarks/ and
+        # is gitignored — compile-cache blobs must never be tracked
+        cache = os.environ.get("JAX_COMPILATION_CACHE_DIR") \
+            or str(Path(__file__).parent / ".jax_cache")
         jax.config.update("jax_compilation_cache_dir", str(cache))
         jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.05)
     except Exception:

@@ -76,10 +76,13 @@ def _stack(pytrees):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *pytrees)
 
 
-@functools.partial(jax.jit, static_argnames=("policy_name", "estimate_z",
-                                             "score_mode", "update"))
-def _sweep_single(tstack, caps, keys, pstack, policy_name, estimate_z,
-                  score_mode, update):
+# The _impl bodies below are the unjitted composition points: the jitted
+# aliases serve the single-device path, and the multi-device fabric
+# (repro.launch.fabric, DESIGN.md §13) shard_maps the SAME bodies over a
+# device mesh's lane shards — one body, two dispatch wrappers, so the
+# sharded graph cannot drift from the single-device one.
+def _sweep_single_impl(tstack, caps, keys, pstack, policy_name, estimate_z,
+                       score_mode, update):
     def point(tr, c, k, pp):
         return _simulate_impl(tr, c, k, policy_name, pp, estimate_z,
                               score_mode, update)
@@ -88,16 +91,24 @@ def _sweep_single(tstack, caps, keys, pstack, policy_name, estimate_z,
     return jax.vmap(lambda tr: inner(tr, caps, keys, pstack))(tstack)
 
 
-@functools.partial(jax.jit, static_argnames=("policy_names", "estimate_z",
-                                             "update"))
-def _sweep_multi(tstack, caps, keys, lidx, pstack, policy_names, estimate_z,
-                 update="lane"):
+_sweep_single = jax.jit(_sweep_single_impl,
+                        static_argnames=("policy_name", "estimate_z",
+                                         "score_mode", "update"))
+
+
+def _sweep_multi_impl(tstack, caps, keys, lidx, pstack, policy_names,
+                      estimate_z, update="lane"):
     def point(tr, c, k, li, pp):
         return _simulate_multi_impl(tr, c, k, li, pp, policy_names,
                                     estimate_z, update=update)
 
     inner = jax.vmap(point, in_axes=(None, 0, 0, 0, 0))
     return jax.vmap(lambda tr: inner(tr, caps, keys, lidx, pstack))(tstack)
+
+
+_sweep_multi = jax.jit(_sweep_multi_impl,
+                       static_argnames=("policy_names", "estimate_z",
+                                        "update"))
 
 
 # ---------------------------------------------------------------------------
@@ -211,13 +222,17 @@ def _check_axes(policies, params):
 
 
 def _flatten_lanes(policy_names, params_list, cap_arrays, seeds,
-                   lane_bucket):
+                   lane_bucket, multiple: int = 1):
     """Flatten policies x params x capacity-axes x seeds into padded lanes.
 
     Returns ``(lflat, pflat, capflats, kflat, G)`` where the flats are
     bucket-padded (repeats of lane 0) and ``G`` is the true lane count to
     slice back out.  Shared by the single-tier and hierarchy grids so the
-    flatten/pad pipeline cannot drift between them.
+    flatten/pad pipeline cannot drift between them.  ``multiple`` rounds
+    the padded lane count up to a device-count multiple for the sweep
+    fabric (DESIGN.md §13) — pad lanes are dead lanes either way: replicas
+    of lane 0 whose results are sliced off, never interacting with real
+    lanes, so padding is invisible in results (tests/test_fabric.py).
     """
     dims = [len(policy_names), len(params_list),
             *[c.shape[0] for c in cap_arrays], len(seeds)]
@@ -232,7 +247,7 @@ def _flatten_lanes(policy_names, params_list, cap_arrays, seeds,
     G = 1
     for d in dims:
         G *= d
-    Gpad = _bucket(G, lane_bucket)
+    Gpad = _bucket(_bucket(G, lane_bucket), multiple)
     if Gpad > G:
         ext = lambda x: jnp.concatenate(
             [x, jnp.broadcast_to(x[:1], (Gpad - G,) + x.shape[1:])])
@@ -247,7 +262,8 @@ def sweep_grid(traces, capacities, policies,
                estimate_z: bool = False, use_kernel=False,
                lane_bucket: int | None = None,
                chunk_size: int | None = None,
-               update: str | None = None) -> SweepGrid:
+               update: str | None = None,
+               devices: int | None = None, mesh=None) -> SweepGrid:
     """Run the full scenario grid in one compiled call.
 
     traces      — one :class:`Trace` or a sequence of identically-shaped
@@ -276,6 +292,17 @@ def sweep_grid(traces, capacities, policies,
                   (:data:`repro.core.simulator.LANE_UPDATE_MIN_OBJECTS`).
                   Every mode is bitwise identical in results
                   (tests/test_hotpath.py).
+    devices     — shard the flattened lane axis over this many devices via
+                  the sweep fabric (DESIGN.md §13).  ``None``/1 keeps
+                  exactly today's single-device graph; ``d > 1`` pads the
+                  lanes to a multiple of ``d`` (dead lanes, sliced off) and
+                  runs each device's shard under ``shard_map`` — results
+                  are bitwise identical for every device count and
+                  lane->device assignment (tests/test_fabric.py).
+    mesh        — an explicit 1-D ``data`` mesh instead of ``devices``
+                  (e.g. :func:`repro.launch.mesh.make_data_mesh` over a
+                  custom device order); always routes through the fabric,
+                  even with one device.
 
     Returns a :class:`SweepGrid`; ``result`` fields are
     ``[T, L, P, C, S]``-shaped.  Each point is bitwise identical to the
@@ -286,10 +313,17 @@ def sweep_grid(traces, capacities, policies,
     caps = jnp.atleast_1d(jnp.asarray(capacities, jnp.float32))
     seeds = [int(s) for s in jnp.atleast_1d(jnp.asarray(seeds))]
 
+    fabric_mesh = None
+    if devices is not None or mesh is not None:
+        from repro.launch.fabric import fabric_lane_multiple, resolve_fabric
+        fabric_mesh = resolve_fabric(devices, mesh)
+
     tstack = _stack(trace_list)
     L, P, C, S = len(policy_names), len(params_list), caps.shape[0], len(seeds)
     lflat, pflat, (cflat,), kflat, G = _flatten_lanes(
-        policy_names, params_list, [caps], seeds, lane_bucket)
+        policy_names, params_list, [caps], seeds, lane_bucket,
+        multiple=(fabric_lane_multiple(fabric_mesh) if fabric_mesh is not None
+                  else 1))
 
     if not single and resolve_score_mode(use_kernel) != "rank":
         raise ValueError("use_kernel is only supported for single-policy "
@@ -300,10 +334,25 @@ def sweep_grid(traces, capacities, policies,
         update = batched_update_mode(trace_list[0].n_objects) \
             if (not single or cflat.shape[0] > 1) else "scatter"
     if chunk_size is not None:
+        if fabric_mesh is not None:
+            raise ValueError(
+                "chunk_size is not supported with devices/mesh yet — the "
+                "chunked grid carries donated per-lane states across a "
+                "host-side loop, which the fabric does not shard")
         res = _run_sweep_chunked(tstack, cflat, kflat, lflat, pflat, single,
                                  policy_names, estimate_z,
                                  resolve_score_mode(use_kernel),
                                  update, chunk_size)
+    elif fabric_mesh is not None:
+        from repro.launch.fabric import fabric_sweep_multi, fabric_sweep_single
+        if single:
+            res = fabric_sweep_single(fabric_mesh, tstack, cflat, kflat,
+                                      pflat, policy_names[0], estimate_z,
+                                      resolve_score_mode(use_kernel), update)
+        else:
+            res = fabric_sweep_multi(fabric_mesh, tstack, cflat, kflat,
+                                     lflat, pflat, policy_names, estimate_z,
+                                     update)
     elif single:
         res = _sweep_single(tstack, cflat, kflat, pflat, policy_names[0],
                             estimate_z, resolve_score_mode(use_kernel),
@@ -350,10 +399,8 @@ class HierSweepGrid(NamedTuple):
             l2=SimResult(*(f[ix] for f in self.result.l2)))
 
 
-@functools.partial(jax.jit, static_argnames=("policy_name", "l2_policy",
-                                             "estimate_z", "n_shards"))
-def _sweep_hier_single(tstack, c1s, c2s, keys, pstack, p2, policy_name,
-                       l2_policy, estimate_z, n_shards):
+def _sweep_hier_single_impl(tstack, c1s, c2s, keys, pstack, p2, policy_name,
+                            l2_policy, estimate_z, n_shards):
     def point(tr, c1, c2, k, pp):
         return _hier_impl_named(tr, c1, c2, k, policy_name, l2_policy, pp,
                                 p2, estimate_z, n_shards)
@@ -362,10 +409,13 @@ def _sweep_hier_single(tstack, c1s, c2s, keys, pstack, p2, policy_name,
     return jax.vmap(lambda tr: inner(tr, c1s, c2s, keys, pstack))(tstack)
 
 
-@functools.partial(jax.jit, static_argnames=("policy_names", "l2_policy",
-                                             "estimate_z", "n_shards"))
-def _sweep_hier_multi(tstack, c1s, c2s, keys, lidx, pstack, p2, policy_names,
-                      l2_policy, estimate_z, n_shards):
+_sweep_hier_single = jax.jit(_sweep_hier_single_impl,
+                             static_argnames=("policy_name", "l2_policy",
+                                              "estimate_z", "n_shards"))
+
+
+def _sweep_hier_multi_impl(tstack, c1s, c2s, keys, lidx, pstack, p2,
+                           policy_names, l2_policy, estimate_z, n_shards):
     def point(tr, c1, c2, k, li, pp):
         return _hier_multi_impl(tr, c1, c2, k, li, policy_names, l2_policy,
                                 pp, p2, estimate_z, n_shards)
@@ -374,12 +424,18 @@ def _sweep_hier_multi(tstack, c1s, c2s, keys, lidx, pstack, p2, policy_names,
     return jax.vmap(lambda tr: inner(tr, c1s, c2s, keys, lidx, pstack))(tstack)
 
 
+_sweep_hier_multi = jax.jit(_sweep_hier_multi_impl,
+                            static_argnames=("policy_names", "l2_policy",
+                                             "estimate_z", "n_shards"))
+
+
 def sweep_hier_grid(traces, n_shards: int, l1_capacities, l2_capacities,
                     policies, params=PolicyParams(), seeds=(0,),
                     l2_policy: str = "lru",
                     l2_params: PolicyParams | None = None,
                     estimate_z: bool = True,
-                    lane_bucket: int | None = None) -> HierSweepGrid:
+                    lane_bucket: int | None = None,
+                    devices: int | None = None, mesh=None) -> HierSweepGrid:
     """Run a hierarchy scenario grid in one compiled call per shard count.
 
     traces         — one :class:`HierTrace` or identically-shaped sequence
@@ -396,6 +452,10 @@ def sweep_hier_grid(traces, n_shards: int, l1_capacities, l2_capacities,
                      :class:`PolicyParams` (same decoupled default as
                      ``simulate_hier`` — the swept L1-params axis never
                      re-parameterizes the shared L2).
+    devices / mesh — shard the flattened lane axis over a device mesh via
+                     the sweep fabric, exactly as in :func:`sweep_grid`
+                     (DESIGN.md §13; bitwise device-count invisibility
+                     pinned by tests/test_fabric.py).
 
     Returns a :class:`HierSweepGrid`; each point is bitwise identical to
     the corresponding :func:`repro.core.hierarchy.simulate_hier` call
@@ -418,13 +478,32 @@ def sweep_hier_grid(traces, n_shards: int, l1_capacities, l2_capacities,
     c2 = jnp.atleast_1d(jnp.asarray(l2_capacities, jnp.float32))
     seeds = [int(s) for s in jnp.atleast_1d(jnp.asarray(seeds))]
 
+    fabric_mesh = None
+    if devices is not None or mesh is not None:
+        from repro.launch.fabric import fabric_lane_multiple, resolve_fabric
+        fabric_mesh = resolve_fabric(devices, mesh)
+
     tstack = _stack(trace_list)
     L, P, C1, C2, S = (len(policy_names), len(params_list), c1.shape[0],
                        c2.shape[0], len(seeds))
     lflat, pflat, (c1flat, c2flat), kflat, G = _flatten_lanes(
-        policy_names, params_list, [c1, c2], seeds, lane_bucket)
+        policy_names, params_list, [c1, c2], seeds, lane_bucket,
+        multiple=(fabric_lane_multiple(fabric_mesh) if fabric_mesh is not None
+                  else 1))
 
-    if single:
+    if fabric_mesh is not None:
+        from repro.launch.fabric import fabric_hier_multi, fabric_hier_single
+        if single:
+            res = fabric_hier_single(fabric_mesh, tstack, c1flat, c2flat,
+                                     kflat, pflat, l2_params,
+                                     policy_names[0], l2_policy, estimate_z,
+                                     int(n_shards))
+        else:
+            res = fabric_hier_multi(fabric_mesh, tstack, c1flat, c2flat,
+                                    kflat, lflat, pflat, l2_params,
+                                    policy_names, l2_policy, estimate_z,
+                                    int(n_shards))
+    elif single:
         res = _sweep_hier_single(tstack, c1flat, c2flat, kflat, pflat,
                                  l2_params, policy_names[0], l2_policy,
                                  estimate_z, int(n_shards))

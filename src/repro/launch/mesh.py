@@ -33,3 +33,31 @@ def make_local_mesh():
     """1-device mesh with the production axis names — smoke tests / examples
     run the same sharded code paths without placeholder devices."""
     return _make_mesh((1, 1), ("data", "model"))
+
+
+def make_data_mesh(n_devices: int | None = None, devices=None):
+    """1-D ``data`` mesh over ``n_devices`` local devices (default: all).
+
+    The sweep fabric's lane-sharding axis (:mod:`repro.launch.fabric`,
+    DESIGN.md §13).  ``devices`` pins an explicit device *order* — the
+    fabric's lane->device assignment follows mesh order, and the parity
+    suite (tests/test_fabric.py) builds permuted meshes to prove the
+    assignment is invisible in results; ``jax.make_mesh`` may reorder
+    devices for locality, so this builder constructs the ``Mesh``
+    directly from the given sequence."""
+    import numpy as np
+
+    devs = list(jax.devices()) if devices is None else list(devices)
+    if n_devices is not None:
+        if n_devices < 1 or n_devices > len(devs):
+            raise ValueError(
+                f"n_devices={n_devices} but {len(devs)} device(s) are "
+                f"available; on CPU, fake host devices must be forced with "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+                f"jax initializes (the subprocess pattern of "
+                f"benchmarks/probe_memory.py)")
+        devs = devs[:n_devices]
+    if AxisType is None:
+        return jax.sharding.Mesh(np.array(devs), ("data",))
+    return jax.sharding.Mesh(np.array(devs), ("data",),
+                             axis_types=(AxisType.Auto,))

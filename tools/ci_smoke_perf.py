@@ -84,6 +84,23 @@ def _serving_canary(p: dict) -> bool:
             and len(p["depth_hists"]) > 0)
 
 
+def _sweep_canary(p: dict) -> bool:
+    """The N=3000 lockstep-union rows (the carried-miss baseline) plus the
+    multi-device fabric's device-scaling rows (DESIGN.md §13): every
+    SCALING_COUNTS device count with a numeric warm wall-clock, and the
+    d4-vs-d1 speedup in the summary so the trajectory records whether
+    lane-sharding pays (or honestly doesn't) on each machine."""
+    rows = p.get("rows", [])
+    fabric = {r.get("devices") for r in rows
+              if str(r.get("name", "")).startswith("fabric_d")
+              and isinstance(r.get("warm_s"), (int, float))}
+    return ({r.get("name") for r in rows}
+            >= {"roster3000_unified", "roster3000_sequential"}
+            and fabric >= {1, 2, 4}
+            and isinstance(p.get("summary", {})
+                           .get("fabric_d4_speedup_over_d1"), (int, float)))
+
+
 def check_bench_schemas(root: Path = REPO_ROOT) -> None:
     """Validate the repo-root BENCH_*.json trajectory files (see module
     docstring).  Raises SystemExit with a message on the first violation."""
@@ -91,9 +108,7 @@ def check_bench_schemas(root: Path = REPO_ROOT) -> None:
         ("BENCH_stream.json",
          lambda p: {r.get("policy") for r in p.get("rows", [])}
          >= {"lru", "stoch_vacdh"} and p.get("device_mode")),
-        ("BENCH_sweep.json",
-         lambda p: {r.get("name") for r in p.get("rows", [])}
-         >= {"roster3000_unified", "roster3000_sequential"}),
+        ("BENCH_sweep.json", _sweep_canary),
         ("BENCH_serving.json", _serving_canary),
     ):
         path = root / fname
