@@ -35,11 +35,19 @@ def _enable_compile_cache() -> None:
 
 def _run_memory_probe() -> None:
     import subprocess
-    proc = subprocess.run(
-        [sys.executable, "-m", "benchmarks.probe_memory", "--layers", "2"],
-        cwd=Path(__file__).parent.parent)
-    if proc.returncode != 0:
-        raise RuntimeError(f"probe_memory exited {proc.returncode}")
+
+    # two probes, both subprocess-isolated: the SimState RSS scaling rows
+    # (sparse slots vs dense at N in {1e4,1e5,1e6} — each cell is its own
+    # child so ru_maxrss is per-configuration) and the model-stack HLO
+    # forensics (must set XLA_FLAGS for 512 host devices before jax
+    # initializes, which cannot happen in this process)
+    for extra in (["--simstate"], ["--layers", "2"]):
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.probe_memory", *extra],
+            cwd=Path(__file__).parent.parent)
+        if proc.returncode != 0:
+            raise RuntimeError(f"probe_memory {extra[0]} exited "
+                               f"{proc.returncode}")
 
 
 def main() -> int:
@@ -82,11 +90,11 @@ def main() -> int:
         # closed-loop serving tails: appends BENCH_serving.json history
         ("serving", lambda: emit(bench_serving.run(full=args.full),
                                  "bench_serving")),
-        # model-stack HLO memory forensics (probe_memory.py).  Runs as a
-        # subprocess: the probe must set XLA_FLAGS (512 host devices)
-        # before jax initializes, which cannot happen in this process.
-        # Opt-in only (--only memory): it compiles model cells, which is
-        # out of the cache-benchmark jobs' wall-clock budget.
+        # memory probes (probe_memory.py): SimState RSS scaling rows
+        # (slots vs dense) + model-stack HLO forensics, both as
+        # subprocesses (see _run_memory_probe).  Opt-in only
+        # (--only memory): the cells compile and the dense million-object
+        # replay is out of the cache-benchmark jobs' wall-clock budget.
         ("memory", _run_memory_probe),
     ]
     for name, fn in jobs:

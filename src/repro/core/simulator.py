@@ -40,8 +40,10 @@ import numpy as np
 from .distributions import Exponential
 from .ranking import (POLICIES, Policy, PolicyParams, agg_mean_hat_at,
                       epi_stochastic_vacdh, lambda_hat_at, make_substrate)
-from .state import (SimState, init_state, kahan_add, lane_add, lane_set,
-                    onehot_add, onehot_set, shift_times)
+from .state import (ObjStats, SimState, SlotState, SlotView, init_slot_state,
+                    init_state, kahan_add, lane_add, lane_set, onehot_add,
+                    onehot_set, shift_times, slot_home, slot_probe,
+                    slot_table_size)
 from .trace import RequestStream, Trace, stream_of_trace
 
 _EPS = 1e-6
@@ -85,6 +87,45 @@ def batched_update_mode(n_objects: int) -> str:
     """The default state-update lowering for a *batched* graph over a
     universe of ``n_objects`` (unbatched graphs always use 'scatter')."""
     return "lane" if n_objects >= LANE_UPDATE_MIN_OBJECTS else "onehot"
+
+
+# Commit-scoring dispatch for the multi-policy sweep engine (DESIGN.md §14):
+#   'lockstep' — the historical vmapped graph: one graph over the whole lane
+#                axis, every lane runs the commit body whenever any lane has
+#                a due commit, and the vmapped lax.cond makes every lane pay
+#                the full substrate + all P epilogues per iteration (the
+#                recorded 0.54x canary).
+#   'compact'  — static policy-grouped dispatch: the lane->policy map is
+#                static python in sweep_grid, so lanes are grouped by policy
+#                and each group runs a statically specialized behavior
+#                (exactly one epilogue in the graph).  Singleton groups run
+#                the unbatched per-point body, where lax.cond genuinely
+#                skips scoring on fit-without-eviction commits; larger
+#                groups vmap same-policy lanes, scoping the cond-union
+#                penalty to lanes that share a policy.  Per-lane arithmetic
+#                is exactly the per-point simulate graph, so results are
+#                bitwise identical (tests/test_hotpath.py).
+# Two gather-compact structures (serialize commits through one unbatched
+# switch body; bucket the K earliest-completing lanes per iteration) were
+# measured SLOWER than lockstep at N=3000 — the batch-level while_loop's
+# per-iteration state gather/scatter exceeds the union savings on this
+# dispatch-bound container (EXPERIMENTS.md §Perf iteration 8).
+_COMMIT_MODES = ("lockstep", "compact")
+
+# Commit-dispatch crossover: grouped dispatch compiles one graph per policy
+# (vs one for the whole set) and gives up cross-policy batching.  At small N
+# batching is the win — the N=100 roster keeps its measured 2.75x unified
+# advantage — while at N >= this threshold the per-commit substrate dominates
+# and the lockstep union penalty flips the sign (EXPERIMENTS.md §Perf
+# iteration 8), so grouped dispatch pays.
+COMPACT_COMMIT_MIN_OBJECTS = 2048
+
+
+def batched_commit_mode(n_objects: int) -> str:
+    """The default commit-scoring dispatch for a batched multi-policy graph
+    over ``n_objects`` (single-policy and fabric graphs are lockstep)."""
+    return ("compact" if n_objects >= COMPACT_COMMIT_MIN_OBJECTS
+            else "lockstep")
 
 
 def _sel(flag, a, b):
@@ -341,8 +382,21 @@ def _gd_cost_at(b: _Behavior, o, sizes, p: PolicyParams, j):
     return cost / jnp.maximum(sizes[j], _EPS)
 
 
+def _argmin_id(vals, ids):
+    """The commit loop's victim/next-commit pick.  ``ids=None`` (dense
+    state) is a plain ``jnp.argmin`` — position IS the object id, so ties
+    break by id already.  The slot-table engine passes its ``key_tab`` so
+    ties break by *object id* instead of hash-dependent slot index
+    (:func:`repro.kernels.ref.tiebreak_argmin_ref`), which is what keeps
+    slot-mode results bitwise identical to dense and hash-seed invariant."""
+    if ids is None:
+        return jnp.argmin(vals)
+    from repro.kernels.ref import tiebreak_argmin_ref
+    return tiebreak_argmin_ref(vals, ids)
+
+
 def _commit_one(b: _Behavior, p: PolicyParams, estimate_z: bool,
-                state: SimState, sizes: jax.Array) -> SimState:
+                state: SimState, sizes: jax.Array, ids=None) -> SimState:
     """Commit the earliest completed outstanding fetch (admission+eviction).
 
     Hot-path structure (DESIGN.md §10): the fused rank-and-select pass —
@@ -359,7 +413,7 @@ def _commit_one(b: _Behavior, p: PolicyParams, estimate_z: bool,
     n = sizes.shape[0]
     o = state.obj
     done_t = jnp.where(o.in_flight, o.complete_t, jnp.inf)
-    j = jnp.argmin(done_t)
+    j = _argmin_id(done_t, ids)
     jhot = (jnp.arange(n) == j) if b.update == "onehot" else None
     t_c = o.complete_t[j]
     realized = t_c - o.issue_t[j]
@@ -445,7 +499,7 @@ def _commit_one(b: _Behavior, p: PolicyParams, estimate_z: bool,
     def body2(carry):
         cached, free, clock, ok, nev = carry
         vr = jnp.where(cached, ranks, jnp.inf)
-        v = jnp.argmin(vr)
+        v = _argmin_id(vr, ids)
         can = vr[v] < cmp
         cached = b.cond_set_at(cached, v, can, False)
         free = jnp.where(can, free + sizes[v], free)
@@ -468,13 +522,14 @@ def _commit_one(b: _Behavior, p: PolicyParams, estimate_z: bool,
 
 
 def _commit_due(b: _Behavior, p: PolicyParams, estimate_z: bool,
-                state: SimState, sizes: jax.Array, t) -> SimState:
+                state: SimState, sizes: jax.Array, t, ids=None) -> SimState:
     """Commit every outstanding fetch with ``complete_t <= t``, in
     completion-time order (the lazy-commit loop run before serving each
-    request; see the module docstring)."""
+    request; see the module docstring).  ``ids`` is the slot-table engine's
+    id map (:func:`_argmin_id`); dense callers leave it None."""
     return jax.lax.while_loop(
         lambda s: s.min_complete <= t,
-        lambda s: _commit_one(b, p, estimate_z, s, sizes),
+        lambda s: _commit_one(b, p, estimate_z, s, sizes, ids),
         state)
 
 
@@ -635,6 +690,161 @@ def _result_of_state(state: SimState) -> SimResult:
                      state.n_misses, state.n_evictions)
 
 
+# ---------------------------------------------------------------------------
+# Sparse slot-table engine (DESIGN.md §14): the dense commit/serve machinery
+# runs unchanged over an [S]-shaped slot axis; a hashed open-addressing
+# table (repro.core.state.SlotView) maps raw object ids onto slots at serve
+# time.  Bitwise parity with dense mode holds by construction whenever the
+# table never fills: per-object arithmetic is scalar gathers at the
+# object's slot, and every reduction over the slot axis is either
+# order-independent (min) or id-tiebroken (_argmin_id), so the hash seed
+# and slot layout cannot leak into results (tests/test_slots.py).
+# ---------------------------------------------------------------------------
+def _slot_lookup_insert(state: SlotState, obj, size, zp, valid):
+    """Resolve ``obj`` to its slot, inserting on first touch.
+
+    Returns ``(state, slot)``.  Objects keep their slot for the rest of the
+    replay (dense mode retains evicted objects' statistics, so eager slot
+    freeing would diverge bitwise); under table-full pressure the first
+    non-in-flight slot in probe order is reclaimed instead — its occupant
+    is evicted if cached and its statistics reset to first-touch values (a
+    documented approximation that never fires when the table is sized to
+    the universe, :func:`repro.core.state.slot_table_size`).  ``valid``
+    gates insertion on padded streaming steps (python True constant-folds).
+    """
+    tab = state.tab
+    slot, found, has_space = slot_probe(tab.key_tab, obj, tab.seed)
+    fresh = ~found
+    if valid is not True:
+        fresh = fresh & valid
+
+    def insert(st: SlotState):
+        sim, tb = st.sim, st.tab
+        n = tb.key_tab.shape[0]
+
+        def reclaimed():
+            # table full: first non-in-flight slot in probe order from the
+            # home slot (in-flight slots carry an outstanding fetch the
+            # commit loop still owns); all-in-flight falls back to the home
+            # slot itself, dropping that fetch.
+            h = slot_home(obj, tb.seed, n)
+            dist = (jnp.arange(n, dtype=jnp.int32) - h) % n
+            cand = jnp.where(sim.obj.in_flight, jnp.int32(n), dist)
+            d = jnp.min(cand)
+            return (h + jnp.where(d < n, d, 0)) % n
+
+        v = jax.lax.cond(has_space, lambda: slot, reclaimed)
+        o = sim.obj
+        was_cached = o.cached[v]
+        was_inflight = o.in_flight[v]
+        o = ObjStats(
+            cached=o.cached.at[v].set(False),
+            in_flight=o.in_flight.at[v].set(False),
+            complete_t=o.complete_t.at[v].set(jnp.inf),
+            issue_t=o.issue_t.at[v].set(0.0),
+            last_access=o.last_access.at[v].set(-jnp.inf),
+            first_access=o.first_access.at[v].set(-jnp.inf),
+            gap_mean=o.gap_mean.at[v].set(0.0),
+            count=o.count.at[v].set(0.0),
+            z_est=o.z_est.at[v].set(zp),
+            agg_sum=o.agg_sum.at[v].set(0.0),
+            agg_sq_sum=o.agg_sq_sum.at[v].set(0.0),
+            agg_cnt=o.agg_cnt.at[v].set(0.0),
+            episode_delay=o.episode_delay.at[v].set(0.0),
+            gd_h=o.gd_h.at[v].set(0.0),
+        )
+        free = jnp.where(was_cached, sim.free + tb.sizes[v], sim.free)
+        nev = jnp.where(was_cached, sim.n_evictions + 1.0, sim.n_evictions)
+        # reclaiming an in-flight slot invalidates the cached min: recompute
+        # (rare; O(S) only inside this branch)
+        min_c = jax.lax.cond(
+            was_inflight,
+            lambda: jnp.min(jnp.where(o.in_flight, o.complete_t, jnp.inf)),
+            lambda: sim.min_complete)
+        tb = tb._replace(key_tab=tb.key_tab.at[v].set(obj),
+                         sizes=tb.sizes.at[v].set(size))
+        return SlotState(sim=sim._replace(obj=o, free=free, n_evictions=nev,
+                                          min_complete=min_c), tab=tb), v
+
+    return jax.lax.cond(fresh, insert, lambda st: (st, slot), state)
+
+
+@functools.partial(jax.jit, static_argnames=("policy_name", "estimate_z",
+                                             "score_mode"),
+                   donate_argnums=(0,))
+def _slot_chunk_step_jit(state: SlotState, times, objs, z_draw, valid, delta,
+                         sizes_full, z_prior_full, params: PolicyParams,
+                         policy_name: str, estimate_z: bool,
+                         score_mode: str) -> SlotState:
+    """One donated-carry chunk dispatch of the slot-table engine.
+
+    Mirrors :func:`_chunk_step_jit` with three differences: the per-step
+    serve is preceded by the table lookup/insert; per-object sizes and
+    z-priors are gathered per request from the full-universe host arrays
+    (``sizes_full``/``z_prior_full`` — the only [N_universe] device arrays
+    the engine keeps); and ``evict_top`` is pinned to 0 — the precomputed
+    victim order tie-breaks by slot index, which cannot reproduce dense id
+    order, while the phase-2 argmin path is id-tiebroken (evict_top is
+    bitwise invisible in dense results, so nothing is lost).
+    """
+    b = _behavior_static(POLICIES[policy_name], params, score_mode, "scatter",
+                         evict_top=0)
+    state = state._replace(sim=shift_times(state.sim, delta))
+
+    def step(st: SlotState, req):
+        t, i, z = req[:3]
+        v = True if valid is None else req[3]
+        sim = _commit_due(b, params, estimate_z, st.sim, st.tab.sizes, t,
+                          ids=st.tab.key_tab)
+        st, slot = _slot_lookup_insert(st._replace(sim=sim), i,
+                                       sizes_full[i], z_prior_full[i], v)
+        sim, _ = _serve(b, params, st.sim, st.tab.sizes, t, slot, z, valid=v)
+        return st._replace(sim=sim), None
+
+    chunk = (times, objs, z_draw) if valid is None \
+        else (times, objs, z_draw, valid)
+    state, _ = jax.lax.scan(step, state, chunk)
+    return state
+
+
+def _simulate_stream_slots(stream: RequestStream, capacity, policy: str,
+                           params: PolicyParams, key, estimate_z: bool,
+                           score_mode: str, chunk_size: int, rebase: bool,
+                           n_slots, slot_seed: int,
+                           prefetch: bool) -> SimResult:
+    """Slot-mode body of :func:`simulate_stream` (the ``state_mode='slots'``
+    route).  Device residency is O(n_slots + n_universe + chunk_size) — the
+    14-field per-object state is [S]-shaped, so million-object universes
+    cost two [N] arrays (sizes, z-priors) plus a table sized to the
+    *touched* key set, not the key space."""
+    times64 = np.asarray(stream.times, np.float64)
+    objs = np.asarray(stream.objs, np.int32)
+    z_draw = np.asarray(stream.z_draw, np.float32)
+    sizes_full = jnp.asarray(stream.sizes, jnp.float32)
+    z_prior_full = jnp.asarray(stream.z_mean, jnp.float32)
+    if n_slots is None:
+        n_slots = slot_table_size(int(np.unique(objs).size))
+    state = init_slot_state(int(n_slots), jnp.float32(capacity),
+                            jnp.asarray(key).copy(), slot_seed)
+
+    def dispatch(state, chunk):
+        t, i, z, valid, delta = chunk
+        return _slot_chunk_step_jit(state, t, i, z, valid, delta, sizes_full,
+                                    z_prior_full, params, policy, estimate_z,
+                                    score_mode)
+
+    chunks = _stream_chunks(times64, objs, z_draw, chunk_size, rebase)
+    if prefetch:
+        pending = next(chunks, None)
+        while pending is not None:
+            cur, pending = pending, next(chunks, None)
+            state = dispatch(state, cur)
+    else:
+        for cur in chunks:
+            state = dispatch(state, cur)
+    return _result_of_state(state.sim)
+
+
 def _stream_chunks(times64, objs, z_draw, chunk_size: int, rebase: bool):
     """Host-side chunk builder: yields ``(device_arrays, valid, delta)`` per
     chunk — the pure prep half of the stream loop, so the dispatch loop can
@@ -684,7 +894,10 @@ def simulate_stream(stream: RequestStream, capacity: float,
                     chunk_size: int | str | None = 65536,
                     rebase: bool = True,
                     evict_top: int | None = None,
-                    prefetch: bool = True) -> SimResult:
+                    prefetch: bool = True,
+                    state_mode: str = "dense",
+                    n_slots: int | None = None,
+                    slot_seed: int = 0) -> SimResult:
     """Run one policy over a host-resident stream, one chunk at a time.
 
     Device residency is O(n_objects + chunk_size) regardless of trace
@@ -713,6 +926,15 @@ def simulate_stream(stream: RequestStream, capacity: float,
     inter-arrival gaps (`tests/test_streaming.py` pins shift invariance).
     ``rebase=False`` feeds absolute f32 times and is bitwise identical to
     :func:`simulate` on any trace that fits on device.
+
+    ``state_mode='slots'`` routes through the sparse slot-table engine
+    (DESIGN.md §14): per-object state lives in a hashed open-addressing
+    table of ``n_slots`` slots (default: sized to the stream's distinct
+    key count, :func:`repro.core.state.slot_table_size`) instead of a
+    dense ``[N]`` struct, so million-object universes replay at bounded
+    RSS.  Results are bitwise identical to dense mode whenever the table
+    never fills (tests/test_slots.py); ``slot_seed`` picks the hash seed
+    and is bitwise invisible in results.
     """
     if params is None:
         params = PolicyParams()
@@ -720,6 +942,23 @@ def simulate_stream(stream: RequestStream, capacity: float,
         key = jax.random.key(0)
     chunk_size = resolve_chunk_size(chunk_size, stream.n_requests)
     score_mode = resolve_score_mode(use_kernel)
+    if state_mode not in ("dense", "slots"):
+        raise ValueError(f"state_mode={state_mode!r}; expected 'dense' or "
+                         f"'slots'")
+    if state_mode == "slots":
+        if evict_top not in (None, 0):
+            raise ValueError(
+                f"evict_top={evict_top} is not supported with "
+                f"state_mode='slots' — the precomputed victim order "
+                f"tie-breaks by slot index, which cannot reproduce dense "
+                f"object-id order; the slot engine pins evict_top=0 (the "
+                f"id-tiebroken argmin path, bitwise identical in dense "
+                f"results)")
+        return _simulate_stream_slots(stream, capacity, policy, params, key,
+                                      estimate_z, score_mode, chunk_size,
+                                      rebase, n_slots, slot_seed, prefetch)
+    if n_slots is not None:
+        raise ValueError("n_slots applies only with state_mode='slots'")
     times64 = np.asarray(stream.times, np.float64)
     objs = np.asarray(stream.objs, np.int32)
     z_draw = np.asarray(stream.z_draw, np.float32)
@@ -756,14 +995,21 @@ def simulate_chunked(trace: Trace, capacity: float,
                      params: PolicyParams | None = None, key=None,
                      estimate_z: bool = False, use_kernel=False,
                      chunk_size: int = 65536,
-                     evict_top: int | None = None) -> SimResult:
+                     evict_top: int | None = None,
+                     state_mode: str = "dense",
+                     n_slots: int | None = None,
+                     slot_seed: int = 0) -> SimResult:
     """Chunked-carry :func:`simulate`: bitwise-identical results, O(chunk)
     trace residency.  Equivalent to ``simulate_stream(stream_of_trace(t),
     rebase=False)`` — the f64 widening round-trips every f32 time exactly
-    (tests/test_streaming.py pins bitwise equality across chunk sizes)."""
+    (tests/test_streaming.py pins bitwise equality across chunk sizes).
+    ``state_mode='slots'`` selects the sparse slot-table engine (see
+    :func:`simulate_stream`)."""
     return simulate_stream(stream_of_trace(trace), capacity, policy, params,
                            key, estimate_z, use_kernel, chunk_size,
-                           rebase=False, evict_top=evict_top)
+                           rebase=False, evict_top=evict_top,
+                           state_mode=state_mode, n_slots=n_slots,
+                           slot_seed=slot_seed)
 
 
 def _simulate_impl(trace: Trace, capacity, key, policy_name: str,
@@ -821,7 +1067,10 @@ def resolve_score_mode(use_kernel) -> str:
 def simulate(trace: Trace, capacity: float, policy: str = "stoch_vacdh",
              params: PolicyParams | None = None, key=None,
              estimate_z: bool = False, use_kernel=False,
-             evict_top: int | None = None) -> SimResult:
+             evict_top: int | None = None,
+             state_mode: str = "dense",
+             n_slots: int | None = None,
+             slot_seed: int = 0) -> SimResult:
     """Run one policy over a trace.
 
     ``params`` rides through jit as a pytree (numeric fields traced — omega /
@@ -830,11 +1079,21 @@ def simulate(trace: Trace, capacity: float, policy: str = "stoch_vacdh",
     the eq.-16 policy (see :func:`resolve_score_mode`).  ``evict_top``
     overrides the precomputed victim-order length (:data:`EVICT_TOP`; 0 =
     the legacy per-eviction argmin graph — results are bitwise identical
-    for every setting, tests/test_hotpath.py)."""
+    for every setting, tests/test_hotpath.py).  ``state_mode='slots'``
+    routes through the sparse slot-table engine — bitwise identical to
+    dense whenever the table never fills (see :func:`simulate_stream`)."""
     if params is None:
         params = PolicyParams()
     if key is None:
         key = jax.random.key(0)
+    if state_mode != "dense":
+        return simulate_stream(stream_of_trace(trace), capacity, policy,
+                               params, key, estimate_z, use_kernel,
+                               chunk_size="auto", rebase=False,
+                               evict_top=evict_top, state_mode=state_mode,
+                               n_slots=n_slots, slot_seed=slot_seed)
+    if n_slots is not None:
+        raise ValueError("n_slots applies only with state_mode='slots'")
     return _simulate(trace, jnp.float32(capacity), key, policy, params,
                      estimate_z, resolve_score_mode(use_kernel),
                      evict_top=evict_top)

@@ -105,6 +105,114 @@ def shift_times(state: SimState, delta) -> SimState:
     return state._replace(obj=o, min_complete=state.min_complete - delta)
 
 
+# ---------------------------------------------------------------------------
+# Sparse slot-table state (DESIGN.md §14).  A fixed open-addressing table
+# maps raw object ids onto S slots; the dense SimState machinery then runs
+# unchanged over the [S]-shaped slot axis.  Objects insert on first touch
+# and *retain* their slot afterwards (retaining evicted objects' statistics
+# is exactly what dense mode does — eager freeing would diverge bitwise);
+# slots are reclaimed only under table-full pressure, which never fires when
+# S is at least the number of distinct keys touched.
+# ---------------------------------------------------------------------------
+SLOT_EMPTY = -1          # key_tab sentinel: no object resides in this slot
+
+
+def _hash_u32(x, seed) -> jax.Array:
+    """32-bit avalanche finalizer (the lowbias32 member of the splitmix64
+    finalizer family — the device is 32-bit here; the host-side trace
+    compactor uses the 64-bit sibling).  Uniformly scrambles object ids so
+    linear-probe runs stay short at bounded load factors."""
+    x = jnp.asarray(x).astype(jnp.uint32) ^ jnp.uint32(seed)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+class SlotView(NamedTuple):
+    """The id->slot mapping riding next to an [S]-shaped :class:`SimState`.
+
+    key_tab  i32[S] — raw object id resident in each slot (SLOT_EMPTY = none)
+    sizes    f32[S] — resident object's size (0 while empty)
+    seed     u32    — hash seed (results are bitwise seed-invariant: every
+                      reduction the simulator runs over the slot axis is
+                      either order-independent or id-tiebroken —
+                      :func:`repro.kernels.ref.tiebreak_argmin_ref`)
+    """
+
+    key_tab: jax.Array
+    sizes: jax.Array
+    seed: jax.Array
+
+
+class SlotState(NamedTuple):
+    """Sparse simulator state: a dense [S] :class:`SimState` over slots plus
+    the :class:`SlotView` table that maps raw object ids onto them."""
+
+    sim: SimState
+    tab: SlotView
+
+
+def slot_home(obj, seed, n_slots: int) -> jax.Array:
+    """The probe start slot for ``obj``."""
+    return (_hash_u32(obj, seed) % jnp.uint32(n_slots)).astype(jnp.int32)
+
+
+def slot_probe(key_tab: jax.Array, obj, seed):
+    """Linear-probe lookup: returns ``(slot, found, empty)``.
+
+    Walks from the home slot until it hits ``obj`` (``found``) or the first
+    empty slot (``empty`` — the insertion point; the classic linear-probing
+    invariant holds because slots are never vacated, only replaced in
+    place).  A full wrap with neither means the table is full: both flags
+    False.  Expected O(1) probes at bounded load factor; worst case S.
+    """
+    n = key_tab.shape[0]
+    h = slot_home(obj, seed, n)
+
+    def cond(c):
+        s, steps = c
+        k = key_tab[s]
+        return (k != obj) & (k != SLOT_EMPTY) & (steps < n)
+
+    def body(c):
+        s, steps = c
+        return (s + 1) % n, steps + 1
+
+    s, _ = jax.lax.while_loop(cond, body, (h, jnp.int32(0)))
+    k = key_tab[s]
+    return s, k == obj, k == SLOT_EMPTY
+
+
+def slot_table_size(n_distinct: int, load: float = 0.5) -> int:
+    """Default slot-table size: the next power of two holding ``n_distinct``
+    keys at most at ``load`` occupancy (floor 64).  At the default 0.5 the
+    table always has headroom, so reclaim never fires and slot-mode results
+    stay bitwise identical to dense mode."""
+    if n_distinct < 0:
+        raise ValueError(f"n_distinct={n_distinct} must be >= 0")
+    if not 0.0 < load <= 1.0:
+        raise ValueError(f"load={load} must be in (0, 1]")
+    need = max(-(-n_distinct // load) if n_distinct else 1, 1)
+    return 1 << max(6, (int(need) - 1).bit_length())
+
+
+def init_slot_state(n_slots: int, capacity, key: jax.Array,
+                    seed: int = 0) -> SlotState:
+    """Fresh sparse state with an all-empty table.  Per-slot ``z_est`` is
+    seeded at insertion time (the inserting engine writes the object's
+    ``z_prior`` into its slot — the same first-touch value dense mode starts
+    from)."""
+    if n_slots < 1:
+        raise ValueError(f"n_slots={n_slots} must be >= 1")
+    sim = init_state(n_slots, capacity, key,
+                     jnp.zeros((n_slots,), jnp.float32))
+    tab = SlotView(
+        key_tab=jnp.full((n_slots,), SLOT_EMPTY, jnp.int32),
+        sizes=jnp.zeros((n_slots,), jnp.float32),
+        seed=jnp.uint32(seed))
+    return SlotState(sim=sim, tab=tab)
+
+
 def kahan_add(total: jax.Array, comp: jax.Array, x: jax.Array):
     """Compensated accumulation — keeps 1e6-term f32 sums exact to ~1 ulp."""
     y = x - comp

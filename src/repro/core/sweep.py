@@ -43,9 +43,10 @@ import numpy as np
 from .hierarchy import (HierResult, HierTrace, _hier_impl_named,
                         _hier_multi_impl, check_shards)
 from .ranking import POLICIES, PolicyParams
-from .simulator import (SimResult, _behavior_multi, _behavior_static,
-                        _result_of_state, _run_chunk, _simulate_impl,
-                        _simulate_multi_impl, batched_update_mode,
+from .simulator import (_COMMIT_MODES, SimResult, _behavior_multi,
+                        _behavior_static, _result_of_state, _run_chunk,
+                        _simulate_impl, _simulate_multi_impl,
+                        batched_commit_mode, batched_update_mode,
                         resolve_score_mode)
 from .state import init_state
 from .trace import Trace
@@ -96,8 +97,64 @@ _sweep_single = jax.jit(_sweep_single_impl,
                                          "score_mode", "update"))
 
 
+def _group_lanes(lane_policy):
+    """Static lane->policy grouping for the compact dispatch: returns
+    ``[(policy_index, [lane positions...]), ...]`` sorted by policy index.
+    ``lane_policy`` is the concrete (python) content of ``lflat`` — the
+    grouping must be static so each group compiles its own specialized
+    graph; lane-bucket / fabric pad lanes are lane-0 replicas and land in
+    policy 0's group, exactly as they run under lockstep."""
+    groups: dict[int, list[int]] = {}
+    for pos, pi in enumerate(lane_policy):
+        groups.setdefault(int(pi), []).append(pos)
+    return sorted(groups.items())
+
+
+def _ungroup_perm(groups):
+    """Inverse permutation taking group-concatenated rows back to lane
+    order (static numpy argsort — group layout is static)."""
+    return jnp.asarray(
+        np.argsort([pos for _, lanes in groups for pos in lanes]))
+
+
 def _sweep_multi_impl(tstack, caps, keys, lidx, pstack, policy_names,
-                      estimate_z, update="lane"):
+                      estimate_z, update="lane", commit_mode="lockstep",
+                      lane_policy=None):
+    if commit_mode == "compact":
+        # Static policy-grouped dispatch (DESIGN.md §14): lanes sharing a
+        # policy vmap together under a statically specialized behavior
+        # (one epilogue in the graph, no cross-policy cond-union);
+        # singleton groups run the *unbatched* per-point body, whose
+        # lax.cond genuinely skips the scoring pass on fit-without-eviction
+        # commits.  Per-lane arithmetic is exactly the per-point simulate
+        # graph — the sweep engine's standing bitwise contract — and the
+        # trace axis is a python loop (unrolled in jit; typically 1).
+        groups = _group_lanes(lane_policy)
+        inv = _ungroup_perm(groups)
+
+        def one_trace(tr):
+            outs = []
+            for pi, lanes in groups:
+                name = policy_names[pi]
+                idx = jnp.asarray(lanes, jnp.int32)
+                c, k = caps[idx], keys[idx]
+                pp = jax.tree.map(lambda x: x[idx], pstack)
+                if len(lanes) == 1:
+                    r = _simulate_impl(tr, c[0], k[0], name,
+                                       jax.tree.map(lambda x: x[0], pp),
+                                       estimate_z, "rank", "scatter")
+                    outs.append(jax.tree.map(lambda x: x[None], r))
+                else:
+                    outs.append(jax.vmap(
+                        lambda c1, k1, p1, name=name: _simulate_impl(
+                            tr, c1, k1, name, p1, estimate_z, "rank",
+                            update))(c, k, pp))
+            cat = jax.tree.map(lambda *xs: jnp.concatenate(xs), *outs)
+            return jax.tree.map(lambda x: x[inv], cat)
+
+        return _stack([one_trace(Trace(*(x[ti] for x in tstack)))
+                       for ti in range(tstack.times.shape[0])])
+
     def point(tr, c, k, li, pp):
         return _simulate_multi_impl(tr, c, k, li, pp, policy_names,
                                     estimate_z, update=update)
@@ -108,7 +165,8 @@ def _sweep_multi_impl(tstack, caps, keys, lidx, pstack, policy_names,
 
 _sweep_multi = jax.jit(_sweep_multi_impl,
                        static_argnames=("policy_names", "estimate_z",
-                                        "update"))
+                                        "update", "commit_mode",
+                                        "lane_policy"))
 
 
 # ---------------------------------------------------------------------------
@@ -138,10 +196,49 @@ def _sweep_single_chunk(states, times, objs, z_draw, valid, sizes, pstack,
 
 
 @functools.partial(jax.jit, static_argnames=("policy_names", "estimate_z",
-                                             "update"),
+                                             "update", "commit_mode",
+                                             "lane_policy"),
                    donate_argnums=(0,))
 def _sweep_multi_chunk(states, times, objs, z_draw, valid, sizes, lidx,
-                       pstack, policy_names, estimate_z, update="lane"):
+                       pstack, policy_names, estimate_z, update="lane",
+                       commit_mode="lockstep", lane_policy=None):
+    if commit_mode == "compact":
+        # static policy-grouped dispatch, as in _sweep_multi_impl: groups
+        # gather their state rows, advance one chunk under a statically
+        # specialized behavior, and the rows are permuted back to lane
+        # order so the carried layout is identical to lockstep's
+        groups = _group_lanes(lane_policy)
+        inv = _ungroup_perm(groups)
+
+        def one_trace(st_t, t_, o_, z_, sz):
+            chunk = (t_, o_, z_) if valid is None else (t_, o_, z_, valid)
+            outs = []
+            for pi, lanes in groups:
+                name = policy_names[pi]
+                idx = jnp.asarray(lanes, jnp.int32)
+                st_g = jax.tree.map(lambda x: x[idx], st_t)
+                pp = jax.tree.map(lambda x: x[idx], pstack)
+                if len(lanes) == 1:
+                    p1 = jax.tree.map(lambda x: x[0], pp)
+                    b = _behavior_static(POLICIES[name], p1, "rank",
+                                         "scatter")
+                    out = _run_chunk(b, p1, estimate_z,
+                                     jax.tree.map(lambda x: x[0], st_g),
+                                     sz, chunk)
+                    outs.append(jax.tree.map(lambda x: x[None], out))
+                else:
+                    def lane_g(st1, p1, name=name):
+                        b = _behavior_static(POLICIES[name], p1, "rank",
+                                             update)
+                        return _run_chunk(b, p1, estimate_z, st1, sz, chunk)
+                    outs.append(jax.vmap(lane_g)(st_g, pp))
+            cat = jax.tree.map(lambda *xs: jnp.concatenate(xs), *outs)
+            return jax.tree.map(lambda x: x[inv], cat)
+
+        return _stack([one_trace(jax.tree.map(lambda x: x[ti], states),
+                                 times[ti], objs[ti], z_draw[ti], sizes[ti])
+                       for ti in range(times.shape[0])])
+
     def lane(st, li, pp, chunk, sz):
         b = _behavior_multi(policy_names, li, pp, update=update)
         return _run_chunk(b, pp, estimate_z, st, sz, chunk)
@@ -157,7 +254,9 @@ def _sweep_multi_chunk(states, times, objs, z_draw, valid, sizes, lidx,
 
 def _run_sweep_chunked(tstack, cflat, kflat, lflat, pflat, single,
                        policy_names, estimate_z, score_mode, update,
-                       chunk_size: int) -> SimResult:
+                       chunk_size: int,
+                       commit_mode: str = "lockstep",
+                       lane_policy=None) -> SimResult:
     if chunk_size < 1:
         raise ValueError(f"chunk_size={chunk_size} must be >= 1")
     n_objects = tstack.sizes.shape[1]
@@ -192,7 +291,8 @@ def _run_sweep_chunked(tstack, cflat, kflat, lflat, pflat, single,
                                          estimate_z, score_mode, update)
         else:
             states = _sweep_multi_chunk(*args, lflat, pflat, policy_names,
-                                        estimate_z, update)
+                                        estimate_z, update, commit_mode,
+                                        lane_policy)
     return _result_of_state(states)
 
 
@@ -263,6 +363,8 @@ def sweep_grid(traces, capacities, policies,
                lane_bucket: int | None = None,
                chunk_size: int | None = None,
                update: str | None = None,
+               commit_mode: str | None = None,
+               state_mode: str = "dense",
                devices: int | None = None, mesh=None) -> SweepGrid:
     """Run the full scenario grid in one compiled call.
 
@@ -292,6 +394,21 @@ def sweep_grid(traces, capacities, policies,
                   (:data:`repro.core.simulator.LANE_UPDATE_MIN_OBJECTS`).
                   Every mode is bitwise identical in results
                   (tests/test_hotpath.py).
+    commit_mode — multi-policy dispatch shape (DESIGN.md §14): 'lockstep'
+                  (one vmapped graph over the whole lane axis — every lane
+                  pays the commit substrate whenever any lane commits) or
+                  'compact' (static policy-grouped dispatch — same-policy
+                  lanes vmap under a statically specialized behavior,
+                  singleton groups run the unbatched per-point body with
+                  real cond scoring skips).  Default ``None`` auto-selects
+                  'compact' at universes >=
+                  :data:`repro.core.simulator.COMPACT_COMMIT_MIN_OBJECTS`
+                  (single-policy and fabric grids stay lockstep).  Bitwise
+                  identical either way (tests/test_hotpath.py).
+    state_mode  — must be 'dense': the sweep engine's lane machinery (and
+                  the fabric) batch dense [N]-state axes only.  Slot-table
+                  replays (``state_mode='slots'``) run through
+                  :func:`repro.core.simulator.simulate_stream`.
     devices     — shard the flattened lane axis over this many devices via
                   the sweep fabric (DESIGN.md §13).  ``None``/1 keeps
                   exactly today's single-device graph; ``d > 1`` pads the
@@ -312,11 +429,43 @@ def sweep_grid(traces, capacities, policies,
     single, policy_names, params_list = _check_axes(policies, params)
     caps = jnp.atleast_1d(jnp.asarray(capacities, jnp.float32))
     seeds = [int(s) for s in jnp.atleast_1d(jnp.asarray(seeds))]
+    if state_mode != "dense":
+        if state_mode == "slots":
+            raise ValueError(
+                "state_mode='slots' is not supported by sweep_grid — the "
+                "sweep engine's lane machinery (and the device fabric) "
+                "batch dense [N]-state lane axes only; run slot-table "
+                "replays through simulate / simulate_stream / "
+                "simulate_chunked")
+        raise ValueError(f"state_mode={state_mode!r}; expected 'dense'")
 
     fabric_mesh = None
     if devices is not None or mesh is not None:
         from repro.launch.fabric import fabric_lane_multiple, resolve_fabric
         fabric_mesh = resolve_fabric(devices, mesh)
+
+    if commit_mode is not None and commit_mode not in _COMMIT_MODES:
+        raise ValueError(f"commit_mode={commit_mode!r}; expected None or "
+                         f"one of {_COMMIT_MODES}")
+    if commit_mode == "compact":
+        if single:
+            raise ValueError(
+                "commit_mode='compact' applies to multi-policy grids (it "
+                "groups lanes by policy under statically specialized "
+                "graphs); a single-policy grid is already statically "
+                "specialized")
+        if fabric_mesh is not None:
+            raise ValueError(
+                "commit_mode='compact' is not supported with devices/mesh "
+                "— the fabric shard_maps one lockstep lane body over "
+                "device shards (the grouped dispatch splits the very lane "
+                "axis the fabric shards); drop devices=/mesh= or pass "
+                "commit_mode='lockstep'")
+    if commit_mode is None:
+        # compact pays at large universes where the per-commit substrate
+        # dominates; single-policy bodies and fabric shards stay lockstep
+        commit_mode = ("lockstep" if single or fabric_mesh is not None
+                       else batched_commit_mode(trace_list[0].n_objects))
 
     tstack = _stack(trace_list)
     L, P, C, S = len(policy_names), len(params_list), caps.shape[0], len(seeds)
@@ -328,6 +477,11 @@ def sweep_grid(traces, capacities, policies,
     if not single and resolve_score_mode(use_kernel) != "rank":
         raise ValueError("use_kernel is only supported for single-policy "
                          "sweeps (the kernel specializes eq. 16)")
+    # the concrete lane->policy map, passed statically so the compact
+    # dispatch can group lanes at trace time (None under lockstep so the
+    # jit cache key does not fragment on it)
+    lane_policy = (tuple(int(x) for x in np.asarray(lflat))
+                   if commit_mode == "compact" else None)
     if update is None:
         # point scatters for an unbatched single lane; once lanes batch,
         # the N-dependent batched default (DESIGN.md §11)
@@ -342,7 +496,8 @@ def sweep_grid(traces, capacities, policies,
         res = _run_sweep_chunked(tstack, cflat, kflat, lflat, pflat, single,
                                  policy_names, estimate_z,
                                  resolve_score_mode(use_kernel),
-                                 update, chunk_size)
+                                 update, chunk_size, commit_mode,
+                                 lane_policy)
     elif fabric_mesh is not None:
         from repro.launch.fabric import fabric_sweep_multi, fabric_sweep_single
         if single:
@@ -359,7 +514,7 @@ def sweep_grid(traces, capacities, policies,
                             update)
     else:
         res = _sweep_multi(tstack, cflat, kflat, lflat, pflat, policy_names,
-                           estimate_z, update)
+                           estimate_z, update, commit_mode, lane_policy)
     res = SimResult(*(x[:, :G].reshape((len(trace_list), L, P, C, S))
                       for x in res))
     return SweepGrid(res, policy_names, tuple(params_list), caps,

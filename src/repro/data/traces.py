@@ -38,7 +38,7 @@ __all__ = ["SyntheticSpec", "zipf_probs", "synthetic_trace",
            "surrogate_trace", "SURROGATES",
            "RawTrace", "CompactionStats", "RealWorldSpec",
            "load_trace_csv", "save_trace_bin", "load_trace_bin",
-           "compact_requests", "realworld_raw"]
+           "compact_requests", "exact_requests", "realworld_raw"]
 
 
 def zipf_probs(n: int, alpha: float) -> jax.Array:
@@ -354,6 +354,30 @@ def compact_requests(raw: RawTrace, *, top_k: int = 4096,
         n_unique=int(n_unique), n_hot=int(n_hot), n_recycle=int(n_recycle),
         n_objects=int(n_objects), tail_unique=tail_unique,
         tail_mass=tail_mass)
+
+
+def exact_requests(raw: RawTrace, *,
+                   latency_base: float = 0.005,
+                   latency_per_mb: float = 2e-4,
+                   dist: MissLatency | None = None,
+                   seed: int = 0) -> tuple[RequestStream, CompactionStats]:
+    """Aliasing-free densification: every distinct raw key gets its own id.
+
+    Forces :func:`compact_requests` onto its injective branch by setting
+    ``top_k`` to the trace's distinct-key count, so ``tail_mass == 0`` and
+    the replay is exactly the uncompacted one — no pooled cold-tail ids,
+    no shared statistics.  The resulting ``n_objects`` equals the number
+    of distinct keys (e.g. ~200k for the realworld surrogate), which the
+    dense engine pays as O(n_objects) state and per-commit substrate; the
+    sparse slot-table engine (``state_mode='slots'``, DESIGN.md §14) is
+    the intended consumer.  Same latency model and draw seed as
+    :func:`compact_requests`, so an exact row and a compacted row differ
+    only by the aliasing being measured."""
+    n_unique = int(np.unique(raw.keys).shape[0])
+    return compact_requests(raw, top_k=n_unique, n_recycle=0,
+                            latency_base=latency_base,
+                            latency_per_mb=latency_per_mb,
+                            dist=dist, seed=seed)
 
 
 # ---------------------------------------------------------------------------

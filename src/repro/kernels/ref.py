@@ -106,6 +106,26 @@ def lane_scatter_add_ref(x, idx, val):
     return x.at[lanes, idx].set(x[lanes, idx] + jnp.asarray(val, x.dtype))
 
 
+def tiebreak_argmin_ref(vals, ids):
+    """Argmin over ``vals`` with ties broken by the smallest ``ids`` entry.
+
+    ``jnp.argmin`` breaks ties by *position*; that convention is load-bearing
+    for the dense simulator, where position IS the object id.  The sparse
+    slot-table engine (DESIGN.md §14) stores objects at hash-dependent slots,
+    so a positional tie-break would leak the hash seed into results.  This
+    two-stage reduction — min value, then min id among the minima — restores
+    the dense convention exactly: when ``ids[s] == s`` (the dense identity
+    map) it is ``jnp.argmin(vals)`` bit-for-bit, and for any slot permutation
+    it picks the slot holding the same *object* the dense argmin would.
+    Callers pre-mask ``vals`` (+inf at ineligible entries), so sentinel ids
+    at masked slots can only win when every entry is masked — in which case
+    the caller's eligibility check fails closed exactly as dense argmin-0
+    does."""
+    m = jnp.min(vals)
+    big = jnp.iinfo(ids.dtype).max
+    return jnp.argmin(jnp.where(vals == m, ids, big))
+
+
 def victim_order_ref(scores, cached, top: int):
     """Masked ascending victim order — the eviction loop's precomputed diet.
 

@@ -278,3 +278,68 @@ def test_batched_update_mode_auto_rule():
                                       batched_update_mode)
     assert batched_update_mode(LANE_UPDATE_MIN_OBJECTS - 1) == "onehot"
     assert batched_update_mode(LANE_UPDATE_MIN_OBJECTS) == "lane"
+
+
+# ---------------------------------------------------------------------------
+# grouped commit dispatch (DESIGN.md §14): 'compact' groups lanes by policy
+# under statically specialized graphs; must be bitwise-invisible vs the
+# historical lockstep graph — the legacy graph is the oracle
+# ---------------------------------------------------------------------------
+def test_compact_commit_dispatch_bitwise_matches_lockstep():
+    """Mixed-policy grid with param and capacity axes: every policy's group
+    holds P*C lanes, so this drives the vmapped same-policy group arm; the
+    chunked variant drives the grouped carry path."""
+    trace = _trace(seed=11)
+    names = ["lru", "stoch_vacdh", "adaptsize", "lhd_mad", "lac"]
+    params = [PolicyParams(omega=0.5), PolicyParams(omega=2.0)]
+    caps = [30.0, 60.0]
+    base = sweep_grid(trace, caps, names, params, commit_mode="lockstep")
+    got = sweep_grid(trace, caps, names, params, commit_mode="compact")
+    _assert_same(base.result, got.result, "compact")
+    chunked = sweep_grid(trace, caps, names, params, commit_mode="compact",
+                         chunk_size=97)
+    _assert_same(base.result, chunked.result, "compact/chunked")
+
+
+def test_compact_singleton_and_padded_groups_match_lockstep():
+    """P=C=S=1 makes every group a singleton (the unbatched per-point body
+    with its genuinely-skipping lax.cond); lane_bucket padding then lands
+    replica lanes in policy 0's group — mixed singleton + vmapped group
+    sizes in one grid."""
+    trace = _trace(seed=12)
+    names = ["lru", "stoch_vacdh", "adaptsize"]
+    params = [PolicyParams(omega=1.0)]
+    base = sweep_grid(trace, 60.0, names, params, commit_mode="lockstep")
+    got = sweep_grid(trace, 60.0, names, params, commit_mode="compact")
+    _assert_same(base.result, got.result, "compact/singleton")
+    padded = sweep_grid(trace, 60.0, names, params, commit_mode="compact",
+                        lane_bucket=8)
+    _assert_same(base.result, padded.result, "compact/padded")
+
+
+def test_batched_commit_mode_auto_rule():
+    from repro.core.simulator import (COMPACT_COMMIT_MIN_OBJECTS,
+                                      batched_commit_mode)
+    assert batched_commit_mode(COMPACT_COMMIT_MIN_OBJECTS - 1) == "lockstep"
+    assert batched_commit_mode(COMPACT_COMMIT_MIN_OBJECTS) == "compact"
+
+
+def test_compact_commit_mode_guards():
+    """Unsupported knob combos fail loudly at the API edge, mirroring the
+    chunk_size+fabric rejection: single-policy grids are already
+    statically specialized, and the fabric shards the very lane axis the
+    grouped dispatch would split."""
+    trace = _trace(seed=13)
+    with pytest.raises(ValueError, match="multi-policy"):
+        sweep_grid(trace, 60.0, "lru", [PolicyParams()],
+                   commit_mode="compact")
+    # devices=1 bypasses the fabric (documented no-op alias) so compact is
+    # legal there; an explicit mesh ALWAYS routes through the fabric, even
+    # with one device — that's the combination the guard must reject
+    from repro.launch.mesh import make_data_mesh
+    with pytest.raises(ValueError, match="devices/mesh"):
+        sweep_grid(trace, 60.0, ["lru", "stoch_vacdh"], [PolicyParams()],
+                   commit_mode="compact", mesh=make_data_mesh(1))
+    with pytest.raises(ValueError, match="commit_mode"):
+        sweep_grid(trace, 60.0, ["lru", "stoch_vacdh"], [PolicyParams()],
+                   commit_mode="bogus")

@@ -1,0 +1,200 @@
+"""Sparse slot-table SimState suite (DESIGN.md §14).
+
+The slot engine stores per-object state in a hashed open-addressing table
+sized to the *touched* key set instead of a dense [N] struct.  Its parity
+contract: whenever the table never fills, results are **bitwise
+identical** to the dense engine — every reduction the simulator runs over
+the object axis is either order-independent or id-tiebroken
+(repro.kernels.ref.tiebreak_argmin_ref), so the hash seed and slot layout
+cannot leak into results.  Under table-full pressure the engine reclaims
+the first non-in-flight slot in probe order (a documented approximation);
+that path must complete with self-consistent counters, not match dense.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (PolicyParams, simulate, simulate_chunked,
+                        simulate_stream, sweep_grid)
+from repro.core.ranking import POLICIES
+from repro.core.state import (SLOT_EMPTY, init_slot_state, slot_home,
+                              slot_probe, slot_table_size)
+from repro.core.trace import stream_of_trace
+from repro.data.traces import SyntheticSpec, synthetic_trace
+
+ALL_POLICIES = sorted(POLICIES)
+
+SPEC = SyntheticSpec(n_objects=24, n_requests=500, rate=300.0,
+                     size_min=1.0, size_max=20.0,
+                     latency_base=0.01, latency_per_mb=1e-3,
+                     stochastic=True)
+
+
+def _trace(seed=0):
+    return synthetic_trace(jax.random.key(seed), SPEC)
+
+
+def _assert_same(a, b, msg=""):
+    for fa, fb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity vs dense on small universes, across the full roster
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_slot_mode_bitwise_matches_dense_full_roster(policy):
+    """Every registered policy, estimate_z on (the operational setting —
+    exercises the z-estimator aggregates living in the slot-shaped state).
+    Dense oracle runs evict_top=0, the path the slot engine pins (itself
+    bitwise-invisible in dense results, tests/test_hotpath.py)."""
+    trace = _trace()
+    dense = simulate(trace, 60.0, policy, estimate_z=True, evict_top=0)
+    slots = simulate(trace, 60.0, policy, estimate_z=True,
+                     state_mode="slots")
+    _assert_same(dense, slots, policy)
+    assert int(dense.n_evictions) > 0      # eviction path actually ran
+
+
+def test_slot_mode_parity_without_estimator():
+    trace = _trace(seed=1)
+    dense = simulate(trace, 60.0, "stoch_vacdh", evict_top=0)
+    slots = simulate(trace, 60.0, "stoch_vacdh", state_mode="slots")
+    _assert_same(dense, slots)
+
+
+@pytest.mark.parametrize("chunk_size", [7, 97, 500])
+def test_slot_chunked_carry_parity(chunk_size):
+    """The donated slot-state carry across chunk boundaries (table +
+    sim state both ride the carry) is chunking-invariant."""
+    trace = _trace(seed=2)
+    dense = simulate(trace, 60.0, "stoch_vacdh", estimate_z=True,
+                     evict_top=0)
+    got = simulate_chunked(trace, 60.0, "stoch_vacdh", estimate_z=True,
+                           state_mode="slots", chunk_size=chunk_size)
+    _assert_same(dense, got, f"chunk={chunk_size}")
+
+
+def test_slot_streamed_rebase_parity_with_dense_stream():
+    """Under rebase=True the chunk boundaries define the f32 offset
+    rounding, so the oracle is the *dense streamed* run with the same
+    chunking — slots vs dense must still agree bitwise."""
+    stream = stream_of_trace(_trace(seed=3))
+    kw = dict(estimate_z=True, chunk_size=101, rebase=True)
+    dense = simulate_stream(stream, 60.0, "stoch_vacdh", evict_top=0, **kw)
+    slots = simulate_stream(stream, 60.0, "stoch_vacdh",
+                            state_mode="slots", **kw)
+    _assert_same(dense, slots)
+    nopre = simulate_stream(stream, 60.0, "stoch_vacdh",
+                            state_mode="slots", prefetch=False, **kw)
+    _assert_same(slots, nopre, "prefetch must be invisible")
+
+
+# ---------------------------------------------------------------------------
+# hash-seed invariance + collision storms
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [7, 123])
+def test_slot_seed_is_bitwise_invisible(seed):
+    trace = _trace(seed=4)
+    base = simulate(trace, 60.0, "stoch_vacdh", estimate_z=True,
+                    state_mode="slots", slot_seed=0)
+    got = simulate(trace, 60.0, "stoch_vacdh", estimate_z=True,
+                   state_mode="slots", slot_seed=seed)
+    _assert_same(base, got, f"slot_seed={seed}")
+
+
+def test_collision_storm_parity():
+    """n_slots=32 for a 24-key universe: 0.75 load in a power-of-two table
+    forces long probe runs and wrapped clusters, but the table never
+    fills — parity must be unconditional."""
+    trace = _trace(seed=5)
+    dense = simulate(trace, 60.0, "lru_mad", estimate_z=True, evict_top=0)
+    got = simulate(trace, 60.0, "lru_mad", estimate_z=True,
+                   state_mode="slots", n_slots=32)
+    _assert_same(dense, got)
+
+
+def test_table_full_reclaim_completes_with_consistent_counters():
+    """n_slots=16 < 24 distinct keys: reclaim MUST fire (the table fills).
+    The run completes with self-consistent counters — it is a documented
+    approximation, not a parity case."""
+    trace = _trace(seed=6)
+    r = simulate(trace, 60.0, "stoch_vacdh", estimate_z=True,
+                 state_mode="slots", n_slots=16)
+    n = int(r.n_requests)
+    assert n == SPEC.n_requests
+    assert int(r.n_hits) + int(r.n_delayed) + int(r.n_misses) == n
+    assert np.isfinite(float(r.total_latency))
+    assert float(r.total_latency) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# table primitives
+# ---------------------------------------------------------------------------
+def test_slot_probe_found_empty_full():
+    n = 8
+    seed = jnp.uint32(0)
+    empty = jnp.full((n,), SLOT_EMPTY, jnp.int32)
+    h = int(slot_home(5, seed, n))
+    # empty table: probe lands on the home slot, insertion point
+    s, found, has_space = slot_probe(empty, 5, seed)
+    assert (int(s), bool(found), bool(has_space)) == (h, False, True)
+    # resident: same slot, found
+    tab = empty.at[h].set(5)
+    s, found, has_space = slot_probe(tab, 5, seed)
+    assert (int(s), bool(found), bool(has_space)) == (h, True, False)
+    # collision: occupant at home, target in next slot -> linear step
+    tab = empty.at[h].set(99).at[(h + 1) % n].set(5)
+    s, found, _ = slot_probe(tab, 5, seed)
+    assert (int(s), bool(found)) == ((h + 1) % n, True)
+    # full table without the key: wrap terminates with both flags False
+    full = jnp.arange(100, 100 + n, dtype=jnp.int32)
+    _, found, has_space = slot_probe(full, 5, seed)
+    assert (bool(found), bool(has_space)) == (False, False)
+
+
+def test_slot_table_size_contract():
+    assert slot_table_size(0) == 64            # floor
+    assert slot_table_size(32) == 64           # 2x headroom at load=0.5
+    assert slot_table_size(33) == 128
+    assert slot_table_size(200_000) == 524_288
+    assert slot_table_size(96, load=0.75) == 128
+    with pytest.raises(ValueError, match="n_distinct"):
+        slot_table_size(-1)
+    with pytest.raises(ValueError, match="load"):
+        slot_table_size(10, load=0.0)
+
+
+def test_init_slot_state_validates():
+    with pytest.raises(ValueError, match="n_slots"):
+        init_slot_state(0, 10.0, jax.random.key(0))
+    st = init_slot_state(64, 10.0, jax.random.key(0))
+    assert st.tab.key_tab.shape == (64,)
+    assert bool(jnp.all(st.tab.key_tab == SLOT_EMPTY))
+
+
+# ---------------------------------------------------------------------------
+# unsupported-knob guards (mirrors the chunk_size+fabric rejection style)
+# ---------------------------------------------------------------------------
+def test_slot_mode_guards():
+    trace = _trace()
+    with pytest.raises(ValueError, match="evict_top"):
+        simulate(trace, 60.0, "lru", state_mode="slots", evict_top=4)
+    with pytest.raises(ValueError, match="n_slots"):
+        simulate(trace, 60.0, "lru", n_slots=64)
+    with pytest.raises(ValueError, match="n_slots"):
+        simulate_stream(stream_of_trace(trace), 60.0, "lru", n_slots=64)
+    with pytest.raises(ValueError, match="state_mode"):
+        simulate(trace, 60.0, "lru", state_mode="sparse")
+
+
+def test_sweep_grid_rejects_slot_mode():
+    trace = _trace()
+    with pytest.raises(ValueError, match="slots"):
+        sweep_grid(trace, 60.0, ["lru", "stoch_vacdh"], [PolicyParams()],
+                   state_mode="slots")
+    with pytest.raises(ValueError, match="state_mode"):
+        sweep_grid(trace, 60.0, ["lru", "stoch_vacdh"], [PolicyParams()],
+                   state_mode="bogus")

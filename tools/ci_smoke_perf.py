@@ -19,7 +19,18 @@ one numeric headline), and the canary rows that future PRs diff against
 (the N=3000 roster pair, the streamed-vs-device stoch_vacdh pair, the
 serving benchmark's scenario x hedging tail grid with its SLO-search and
 hierarchy rows) actually exist — so a benchmark refactor cannot silently
-stop recording the trajectory.
+stop recording the trajectory.  It additionally gates the
+``roster3000_unified_over_sequential`` canary *trend*: the latest summary
+value must be numeric and must not fall below the best value the history
+has ever recorded by more than ``TREND_TOLERANCE`` (the ISSUE-9 grouped
+commit dispatch flipped this ratio past 1.0; a silent slide back to the
+lockstep-union 0.54x regime is exactly what this catches).
+
+The default smoke also runs a bounded million-object slot-table replay in
+a child process (probe_memory's subprocess pattern: ``ru_maxrss`` is a
+process-lifetime high-water mark, so the cell needs its own process) and
+fails if its peak RSS exceeds ``--rss-ceiling-mb`` — the scale claim of
+DESIGN.md §14 stated as a CI invariant.
 
 Usage: PYTHONPATH=src python tools/ci_smoke_perf.py [--floor REQ_S]
        PYTHONPATH=src python tools/ci_smoke_perf.py --check-bench
@@ -39,6 +50,18 @@ sys.path.insert(0, str(REPO_ROOT))
 DEFAULT_FLOOR = 5_000        # req/s; dev-container measures ~87k
 N_REQUESTS = 100_000
 CHUNK_SIZE = 16_384
+
+# canary-trend gate: the latest roster3000_unified_over_sequential may sit
+# at most this fraction below the best history value (shared runners are
+# noisy; a real regression to the lockstep-union regime is a ~2.5x drop)
+TREND_TOLERANCE = 0.25
+
+# bounded million-object slot-mode smoke (child process); the dev
+# container measures ~233 MB peak — the ceiling is ~4x that, generous for
+# runner noise but far below the dense engine's multi-GB footprint at 1M
+SLOTS_SMOKE_KEYS = 1_000_000
+SLOTS_SMOKE_REQUESTS = 30_000
+DEFAULT_RSS_CEILING_MB = 1_024
 
 
 def _fail(msg: str) -> None:
@@ -101,6 +124,34 @@ def _sweep_canary(p: dict) -> bool:
                            .get("fabric_d4_speedup_over_d1"), (int, float)))
 
 
+def _check_sweep_trend(payload: dict, tol: float = TREND_TOLERANCE) -> None:
+    """Gate the unified-vs-sequential canary's *trajectory*, not just its
+    presence: the latest ``roster3000_unified_over_sequential`` must be
+    numeric and must not regress below the best value history has ever
+    recorded by more than ``tol`` (relative).  History entries predating
+    the canary (or non-numeric ones) are skipped, so the gate tightens
+    itself as better measurements land — recording an improvement raises
+    the bar for every later PR."""
+    key = "roster3000_unified_over_sequential"
+    cur = payload.get("summary", {}).get(key)
+    if not isinstance(cur, (int, float)):
+        _fail(f"BENCH_sweep.json: summary lacks a numeric '{key}'")
+    recorded = [e[key] for e in payload.get("history", [])
+                if isinstance(e.get(key), (int, float))]
+    if not recorded:
+        _fail(f"BENCH_sweep.json: no history entry records '{key}' — "
+              f"the canary trend has no baseline")
+    best = max(recorded)
+    floor = best * (1.0 - tol)
+    if cur < floor:
+        _fail(f"BENCH_sweep.json: {key}={cur:.3f} regressed below "
+              f"{floor:.3f} (best recorded {best:.3f} minus {tol:.0%} "
+              f"tolerance) — the commit-dispatch canary is sliding back "
+              f"toward the lockstep-union regime")
+    print(f"OK: {key}={cur:.3f} within {tol:.0%} of best recorded "
+          f"({best:.3f})")
+
+
 def check_bench_schemas(root: Path = REPO_ROOT) -> None:
     """Validate the repo-root BENCH_*.json trajectory files (see module
     docstring).  Raises SystemExit with a message on the first violation."""
@@ -125,7 +176,43 @@ def check_bench_schemas(root: Path = REPO_ROOT) -> None:
             _fail(f"{fname}: canary rows absent — the trajectory would "
                   f"silently lose its regression baseline")
         _check_history(payload, fname)
+        if fname == "BENCH_sweep.json":
+            _check_sweep_trend(payload)
     print("OK: bench JSON schemas valid (canary rows + history present)")
+
+
+def run_slots_smoke(rss_ceiling_mb: float,
+                    timeout_s: float = 900.0) -> dict:
+    """Bounded million-object slot-mode streamed replay in a child process;
+    returns the child's measurement row and fails hard on an RSS breach."""
+    import subprocess
+    cmd = [sys.executable, "-m", "benchmarks.probe_memory",
+           "--simstate-child", str(SLOTS_SMOKE_KEYS), "slots",
+           "--requests", str(SLOTS_SMOKE_REQUESTS)]
+    import os
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(cmd, cwd=REPO_ROOT, env=env,
+                          capture_output=True, text=True,
+                          timeout=timeout_s)
+    marked = [ln for ln in proc.stdout.splitlines()
+              if ln.startswith("SIMSTATE ")]
+    if proc.returncode != 0 or not marked:
+        tail = (proc.stderr or proc.stdout).strip().splitlines()
+        raise SystemExit("SLOTS SMOKE FAIL: child exited "
+                         f"{proc.returncode}: " + " | ".join(tail[-3:]))
+    row = json.loads(marked[-1][len("SIMSTATE "):])
+    rss = row["peak_rss_mb"]
+    if rss_ceiling_mb and rss > rss_ceiling_mb:
+        raise SystemExit(
+            f"SLOTS SMOKE FAIL: peak RSS {rss:.0f} MB over the "
+            f"{rss_ceiling_mb:.0f} MB ceiling for a "
+            f"{SLOTS_SMOKE_KEYS // 10**6}M-key slot-mode replay — the "
+            f"bounded-residency claim of DESIGN.md §14 no longer holds")
+    print(f"OK: slots smoke ({SLOTS_SMOKE_KEYS // 10**6}M keys, "
+          f"{SLOTS_SMOKE_REQUESTS} requests) peak RSS {rss:.0f} MB <= "
+          f"{rss_ceiling_mb:.0f} MB ceiling")
+    return row
 
 
 def main() -> int:
@@ -137,6 +224,12 @@ def main() -> int:
     ap.add_argument("--policy", default="stoch_vacdh")
     ap.add_argument("--check-bench", action="store_true",
                     help="lint BENCH_*.json trajectory files and exit")
+    ap.add_argument("--rss-ceiling-mb", type=float,
+                    default=DEFAULT_RSS_CEILING_MB,
+                    help="peak-RSS ceiling for the million-object slots "
+                         "smoke (0 records without asserting)")
+    ap.add_argument("--no-slots-smoke", action="store_true",
+                    help="skip the million-object slot-mode child replay")
     args = ap.parse_args()
 
     if args.check_bench:
@@ -164,6 +257,11 @@ def main() -> int:
     wall = time.perf_counter() - t0
     req_s = N_REQUESTS / wall
 
+    # million-object slot-mode replay in a child process: asserts the
+    # DESIGN.md §14 bounded-RSS claim and rides along in the artifact
+    slots_row = (None if args.no_slots_smoke
+                 else run_slots_smoke(args.rss_ceiling_mb))
+
     # same schema/stamping as the BENCH_*.json trajectory files
     path = write_bench_json("smoke_perf.json", dict(
         benchmark="ci_long_trace_smoke",
@@ -178,6 +276,8 @@ def main() -> int:
         peak_rss_mb=round(
             resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0, 1),
         hit_ratio=round(float(r.hit_ratio), 4),
+        slots_smoke=slots_row,
+        slots_rss_ceiling_mb=args.rss_ceiling_mb,
     ), path=args.out)
     print(json.dumps(json.loads(path.read_text()), indent=2))
 
