@@ -52,13 +52,29 @@ except ImportError:
 
 from repro.core.percentile import StreamingQuantile
 from repro.data.scenarios import make_scenario
-from repro.serving.engine import LatencyModel, ServeEngine
+from repro.serving.engine import LatencyModel, ReplicaSet, ServeEngine
+from repro.serving.faults import DegradePolicy, FaultPlan
 
 SLO_MS_DEFAULT = 150.0
 WARMUP_FRAC = 0.25
 DEPTH_CAP = 64          # waiter depths >= cap share the overflow bucket
 POLICY = "stoch_vacdh"
 HEADLINE_SCENARIOS = ("flash_crowd", "brownout")
+# scenarios that get a req/s-at-SLO bisection row; degraded_replica is the
+# brownout-flip headline (same degradation schedule as brownout, but hitting
+# ONE of three replicas, so hedging/retries can route around it — DESIGN §15)
+SLO_SCENARIOS = ("flash_crowd", "brownout", "degraded_replica",
+                 "origin_outage")
+# an SLO pass additionally requires the shed+failed fraction of measured
+# requests to stay within this budget — otherwise shedding everything
+# would trivially "meet" any latency SLO
+SLO_ERR_BUDGET = 0.01
+# single-origin hedging waits for p95: a duplicate lands in the SAME
+# degraded queue, so hedge sparingly.  With independent replicas the
+# duplicate is cheap and lands elsewhere, so the client hedges earlier —
+# the tied-request discipline (Dean & Barroso CACM'13); at p95 the
+# deadline alone (~3x the mean) busts a 150 ms SLO for ~1k-token prefixes
+REPLICA_HEDGE_QUANTILE = 0.85
 
 
 def _footprint(w) -> float:
@@ -67,24 +83,59 @@ def _footprint(w) -> float:
     return float(np.sum(w.n_tokens[first], dtype=np.float64))
 
 
+def _fault_kwargs(w, lat: LatencyModel, seed: int,
+                  rate_scale: float) -> dict:
+    """Replica set + fault plan + degrade policy for workloads with
+    replica structure (DESIGN.md §15).  The replica models carry the
+    scenario's per-replica health schedules (origin truth); the engine's
+    own ``lat`` model stays client-side belief — its deadlines are what
+    let hedges and retries route around a secretly degraded replica."""
+    if w.n_replicas <= 1:
+        return {}
+    base = list(w.replica_scales) if w.replica_scales else \
+        [w.latency_scale] * w.n_replicas
+    scale_fns = [lambda t, f=f: f(t * rate_scale) for f in base]
+    outages = tuple((r, t0 / rate_scale, t1 / rate_scale)
+                    for r, t0, t1 in w.outages)
+    return dict(
+        replicas=ReplicaSet.uniform(w.n_replicas, lat, scale_fns=scale_fns,
+                                    seed=seed),
+        faults=FaultPlan(seed=seed, outages=outages),
+        degrade=DegradePolicy())
+
+
 def _make_engine(w, *, hedging: bool, hier: bool, seed: int = 0,
-                 cap_frac: float = 0.25) -> ServeEngine:
+                 cap_frac: float = 0.25,
+                 rate_scale: float = 1.0) -> ServeEngine:
     """Engine under test.  Single tier: one cache sized to ``cap_frac`` of
     the key footprint, its own (brownout-scaled) latency model.  Hierarchy:
     a small L1 edge over a shared L2 — only the L2's origin fetches are
     hedgeable, and both the origin latency and the L1<->L2 hop degrade
-    through the scenario's ``latency_scale`` hook."""
+    through the scenario's ``latency_scale`` hook.  Workloads with
+    ``n_replicas > 1`` get a ReplicaSet + FaultPlan + DegradePolicy on
+    whichever tier performs origin fetches (single tier, or the L2).
+
+    ``rate_scale`` is the SLO search's time compression: arrivals replay
+    at ``t / rate_scale``, so every scenario schedule (brownout hooks,
+    per-replica health, outage windows) is mapped onto the compressed
+    clock here.  Otherwise a fast probe would outrun its own fault
+    schedule and measure the scenario with the faults silently absent."""
     foot = _footprint(w)
+    m = rate_scale
     lat = LatencyModel(base_s=0.02, per_token_s=2e-5,
-                       scale_fn=w.latency_scale)
+                       scale_fn=lambda t: w.latency_scale(t * m),
+                       hedge_quantile=REPLICA_HEDGE_QUANTILE
+                       if w.n_replicas > 1 else 0.95)
     size_fn = lambda n: float(n)
+    fault_kw = _fault_kwargs(w, lat, seed, m)
     if not hier:
         return ServeEngine(capacity=cap_frac * foot, policy=POLICY,
                            latency=lat, state_size_fn=size_fn,
-                           hedging=hedging, seed=seed)
+                           hedging=hedging, seed=seed, **fault_kw)
     l2 = ServeEngine(capacity=0.5 * foot, policy=POLICY, latency=lat,
-                     state_size_fn=size_fn, hedging=hedging, seed=seed)
-    hop = lambda t: 0.005 * w.latency_scale(t)
+                     state_size_fn=size_fn, hedging=hedging, seed=seed,
+                     **fault_kw)
+    hop = lambda t: 0.005 * w.latency_scale(t * m)
     return ServeEngine(capacity=0.15 * foot, policy=POLICY,
                        state_size_fn=size_fn, hedging=hedging,
                        seed=seed + 1, l2=l2, hop_s=hop)
@@ -93,24 +144,36 @@ def _make_engine(w, *, hedging: bool, hier: bool, seed: int = 0,
 def _drive(w, eng, *, rate_scale: float = 1.0, n_limit: int | None = None):
     """Open-loop replay: warmup segment untimed, measurement segment
     profiled.  Returns (latency sketch, depth histogram, measured wall
-    seconds, number of measured requests)."""
+    seconds, number of measured requests, shed count, failed count).
+
+    Shed and failed requests are EXCLUDED from the latency sketch — a
+    fast shed/failure would flatter the percentiles of the requests that
+    were actually served — and reported as measured-segment counts so
+    rows carry them as rates next to the tail percentiles."""
     n = w.n_requests if n_limit is None else min(n_limit, w.n_requests)
     warm = int(WARMUP_FRAC * n)
     times = w.times / rate_scale
     keys, toks = w.keys, w.n_tokens
     sq = StreamingQuantile(rel_err=0.005, min_value=1e-6, max_value=1e5)
     depth = np.zeros(DEPTH_CAP + 1, np.int64)
+    shed = failed = 0
     for i in range(warm):
-        eng.request(float(times[i]), f"p{keys[i]}", int(toks[i]))
+        eng.serve(float(times[i]), f"p{keys[i]}", int(toks[i]))
     t0 = time.perf_counter()
     for i in range(warm, n):
         before = eng.stats.delayed_hits
-        lat = eng.request(float(times[i]), f"p{keys[i]}", int(toks[i]))
-        sq.add(lat)
+        outcome, lat = eng.serve(float(times[i]), f"p{keys[i]}",
+                                 int(toks[i]))
+        if outcome == "shed":
+            shed += 1
+        elif outcome == "failed":
+            failed += 1
+        else:
+            sq.add(lat)
         if eng.stats.delayed_hits > before:
             depth[min(eng.pending[f"p{keys[i]}"].waiters, DEPTH_CAP)] += 1
     wall = time.perf_counter() - t0
-    return sq, depth, wall, n - warm
+    return sq, depth, wall, n - warm, shed, failed
 
 
 def _depth_summary(depth: np.ndarray) -> dict:
@@ -132,19 +195,27 @@ def req_s_at_slo(w, *, hedging: bool, slo_s: float, n_probe: int,
                  n_iters: int = 5, seed: int = 0) -> dict:
     """Largest sustained arrival rate whose p99 meets the SLO.
 
-    Bisects the rate multiplier ``m`` (arrival times compressed by ``m``)
+    Bisects the rate multiplier ``m`` (arrival times compressed by ``m``,
+    fault/degradation schedules compressed with them — see _make_engine)
     over ``[1/8, 8] x`` the scenario's realized mean rate; each probe is a
-    fresh single-tier engine over the first ``n_probe`` requests.  Returns
-    the highest passing multiplier, the implied req/s, and its p99."""
+    fresh single-tier engine over the first ``n_probe`` requests.  A probe
+    passes when its measured p99 meets the SLO AND its shed+failed
+    fraction stays within ``SLO_ERR_BUDGET`` — shedding everything must
+    not count as meeting the latency target.  Returns the highest passing
+    multiplier, the implied req/s, its p99, and its shed+failed rate."""
     base_rate = w.n_requests / max(w.duration, 1e-9)
     lo, hi = 0.0, None
-    m, best_p99 = 1.0, float("nan")
+    m, best_p99, best_err = 1.0, float("nan"), float("nan")
     for _ in range(n_iters):
-        eng = _make_engine(w, hedging=hedging, hier=False, seed=seed)
-        sq, _, _, _ = _drive(w, eng, rate_scale=m, n_limit=n_probe)
+        eng = _make_engine(w, hedging=hedging, hier=False, seed=seed,
+                           rate_scale=m)
+        sq, _, _, n_meas, shed, failed = _drive(w, eng, rate_scale=m,
+                                                n_limit=n_probe)
         p99 = sq.quantile(0.99)
-        if p99 <= slo_s:
-            lo, best_p99 = m, p99
+        err = (shed + failed) / max(n_meas, 1)
+        if sq.summary().count > 0 and p99 <= slo_s \
+                and err <= SLO_ERR_BUDGET:
+            lo, best_p99, best_err = m, p99, err
             m = min(m * 2.0, 8.0) if hi is None else 0.5 * (m + hi)
         else:
             hi = m
@@ -152,24 +223,35 @@ def req_s_at_slo(w, *, hedging: bool, slo_s: float, n_probe: int,
         if hi is not None and hi - lo < 0.05:
             break
     return dict(slo_ms=round(slo_s * 1e3, 1),
+                slo_err_budget=SLO_ERR_BUDGET,
                 rate_mult_at_slo=round(lo, 3),
                 req_s_at_slo=round(lo * base_rate, 1),
+                n_replicas=w.n_replicas,
                 # None, not NaN: NaN is not valid strict JSON and would
                 # poison BENCH_serving.json for non-Python consumers
                 p99_ms_at_slo=round(best_p99 * 1e3, 3)
-                if lo > 0.0 else None)
+                if lo > 0.0 else None,
+                shed_rate_at_slo=round(best_err, 5) if lo > 0.0 else None)
 
 
 def run(full: bool = False, smoke: bool = False,
         slo_ms: float = SLO_MS_DEFAULT, out: str | None = None,
         seed: int = 0) -> list[dict]:
     if smoke:
-        scenarios, n_req, n_probe, n_iters = list(HEADLINE_SCENARIOS), 3000, 1500, 3
+        # flash_crowd keeps the legacy-path canary; the two replica
+        # scenarios exercise the fault-injection path end to end
+        scenarios = ["flash_crowd", "degraded_replica", "origin_outage"]
+        slo_scen = ["flash_crowd", "degraded_replica"]
+        n_req, n_probe, n_iters = 3000, 1500, 3
     elif full:
-        scenarios = ["diurnal", "flash_crowd", "zipf_drift", "brownout"]
+        scenarios = ["diurnal", "flash_crowd", "zipf_drift", "brownout",
+                     "degraded_replica", "origin_outage"]
+        slo_scen = [s for s in scenarios if s in SLO_SCENARIOS]
         n_req, n_probe, n_iters = 30_000, 8000, 5
     else:
-        scenarios = ["diurnal", "flash_crowd", "zipf_drift", "brownout"]
+        scenarios = ["diurnal", "flash_crowd", "zipf_drift", "brownout",
+                     "degraded_replica", "origin_outage"]
+        slo_scen = [s for s in scenarios if s in SLO_SCENARIOS]
         n_req, n_probe, n_iters = 8000, 4000, 5
     slo_s = slo_ms * 1e-3
     rows, depth_hists = [], {}
@@ -177,15 +259,16 @@ def run(full: bool = False, smoke: bool = False,
     def one(scenario: str, hier: bool, hedging: bool) -> dict:
         w = make_scenario(scenario, seed=seed, n_requests=n_req, n_keys=800)
         eng = _make_engine(w, hedging=hedging, hier=hier, seed=seed)
-        sq, depth, wall, n_meas = _drive(w, eng)
+        sq, depth, wall, n_meas, shed, failed = _drive(w, eng)
         s = sq.summary()
         st = eng.stats
         cfg = f"{scenario}/{'hier' if hier else 'single'}/" \
               f"{'hedged' if hedging else 'unhedged'}"
         depth_hists[cfg] = _depth_hist(depth)
+        fst = eng.l2.stats if eng.l2 is not None else st
         row = dict(scenario=scenario, mode="hier" if hier else "single",
                    hedging=hedging, policy=POLICY, n_requests=n_req,
-                   n_measured=n_meas,
+                   n_measured=n_meas, n_replicas=w.n_replicas,
                    p50_ms=round(s.p50 * 1e3, 3),
                    p95_ms=round(s.p95 * 1e3, 3),
                    p99_ms=round(s.p99 * 1e3, 3),
@@ -194,6 +277,11 @@ def run(full: bool = False, smoke: bool = False,
                    max_ms=round(s.max * 1e3, 3),
                    hits=st.hits, delayed_hits=st.delayed_hits,
                    misses=st.misses, hedges=st.hedges,
+                   shed=shed, failed=failed,
+                   shed_rate=round(shed / max(n_meas, 1), 5),
+                   fail_rate=round(failed / max(n_meas, 1), 5),
+                   retries=fst.retries, timeouts=fst.timeouts,
+                   fault_failures=fst.fault_failures, gaveup=fst.gaveup,
                    **_depth_summary(depth),
                    wall_s=round(wall, 2),
                    drive_req_per_s=int(n_meas / max(wall, 1e-9)))
@@ -213,8 +301,8 @@ def run(full: bool = False, smoke: bool = False,
         for hedging in (True, False):
             one(scenario, hier=True, hedging=hedging)
 
-    # --- sustained req/s at the SLO (headline scenarios, single tier) ---
-    for scenario in [s for s in scenarios if s in HEADLINE_SCENARIOS]:
+    # --- sustained req/s at the SLO (single tier) -----------------------
+    for scenario in slo_scen:
         for hedging in (True, False):
             w = make_scenario(scenario, seed=seed, n_requests=n_req,
                               n_keys=800)
@@ -242,12 +330,24 @@ def run(full: bool = False, smoke: bool = False,
                                         "req_s_at_slo"),
         brownout_hedged_req_s_at_slo=_pick("brownout", "slo_search", True,
                                            "req_s_at_slo"),
+        # the brownout flip (ISSUE 10): the PR-6 brownout schedule hitting
+        # one of three replicas, with hedges/retries escaping to healthy
+        # ones — compare against brownout_hedged_req_s_at_slo above
+        brownout_replicas_hedged_req_s_at_slo=_pick(
+            "degraded_replica", "slo_search", True, "req_s_at_slo"),
+        outage_hedged_req_s_at_slo=_pick(
+            "origin_outage", "slo_search", True, "req_s_at_slo"),
+        degraded_replica_hedged_p99_ms=_pick(
+            "degraded_replica", "single", True, "p99_ms"),
+        origin_outage_hedged_p99_ms=_pick(
+            "origin_outage", "single", True, "p99_ms"),
     ).items() if v is not None}
 
     write_bench_json("BENCH_serving.json", dict(
         benchmark="bench_serving",
         workload=dict(scenarios=scenarios, n_requests=n_req, n_keys=800,
                       policy=POLICY, slo_ms=slo_ms, warmup_frac=WARMUP_FRAC,
+                      slo_err_budget=SLO_ERR_BUDGET,
                       smoke=smoke, full=full, seed=seed),
         rows=rows,
         depth_hists=depth_hists,
@@ -259,7 +359,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized: 2 scenarios, small traces")
+                    help="CI-sized: 3 scenarios (incl. both fault-"
+                         "injection ones), small traces")
     ap.add_argument("--slo-ms", type=float, default=SLO_MS_DEFAULT)
     ap.add_argument("--out", default=None,
                     help="write the JSON snapshot here instead of "

@@ -17,6 +17,18 @@ the serving benchmark needs the workloads that actually break tails:
                              ``latency_scale`` hook the serving engine
                              threads through ``LatencyModel`` and the
                              hierarchy hop composition.
+* :class:`OutageSpec`      — replica outages: scheduled windows in which
+                             one of ``n_replicas`` origins is hard-down
+                             (fetches against it fail fast), exposed as
+                             realized ``outages`` windows for the fault
+                             plan (DESIGN.md §15).
+* :class:`DegradedReplicaSpec` — the brownout, re-posed with replica
+                             structure: each episode degrades ONE of
+                             ``n_replicas`` origins, exposed as
+                             per-replica ``replica_scales`` schedules —
+                             the scenario where hedging to an
+                             *independent* replica can route around the
+                             degradation PR 6 recorded as unroutable.
 
 Every generator is pure numpy off one ``np.random.default_rng(seed)`` —
 bitwise reproducible per seed — and returns a :class:`ServingWorkload`
@@ -33,7 +45,8 @@ from typing import Callable
 import numpy as np
 
 __all__ = ["ServingWorkload", "DiurnalSpec", "FlashCrowdSpec",
-           "ZipfDriftSpec", "BrownoutSpec", "SCENARIOS", "make_scenario"]
+           "ZipfDriftSpec", "BrownoutSpec", "OutageSpec",
+           "DegradedReplicaSpec", "SCENARIOS", "make_scenario"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +63,13 @@ class ServingWorkload:
     rate_fn       t -> nominal arrival rate at t (req/s); the property
                   tests integrate it to check arrival-mass conservation
     name, spec    provenance
+    n_replicas    origin replica count the scenario assumes (1 = the
+                  legacy single origin)
+    replica_scales per-replica health schedules: tuple of t -> multiplier
+                  callables, one per replica (empty = all healthy /
+                  governed by the global ``latency_scale``)
+    outages       realized replica-outage windows ``(replica, t0, t1)``
+                  for the engine's fault plan (empty = none)
     """
 
     times: np.ndarray
@@ -60,6 +80,9 @@ class ServingWorkload:
     rate_fn: Callable[[float], float]
     name: str
     spec: object
+    n_replicas: int = 1
+    replica_scales: tuple = ()
+    outages: tuple = ()
 
     @property
     def n_requests(self) -> int:
@@ -281,11 +304,122 @@ class BrownoutSpec:
             name="brownout", spec=self)
 
 
+def _piecewise_scale(windows: tuple, severity: float):
+    """t -> severity inside any window, else 1.0 (bound early, no late
+    closure capture)."""
+    def scale(t: float) -> float:
+        for lo, hi in windows:
+            if lo <= t < hi:
+                return severity
+        return 1.0
+    return scale
+
+
+@dataclasses.dataclass(frozen=True)
+class OutageSpec:
+    """Stationary Poisson arrivals with scheduled **replica outages**: in
+    each of ``n_outages`` windows one of ``n_replicas`` origins is hard
+    down — fetches routed to it fail fast instead of completing.  The
+    realized windows are exposed as ``outages = (replica, t0, t1)``
+    tuples for the engine's :class:`~repro.serving.faults.FaultPlan`;
+    with retries walking the replica ring, the outage costs a detection
+    delay plus backoff, not an unbounded stall (DESIGN.md §15).
+
+    Windows are placed in disjoint slots across the middle of the trace
+    (warmup and tail stay clean), one replica drawn per window."""
+
+    n_requests: int = 20_000
+    n_keys: int = 2_000
+    zipf_alpha: float = 0.9
+    rate: float = 2_000.0
+    n_replicas: int = 3
+    n_outages: int = 2
+    outage_frac: float = 0.12       # duration of each outage / horizon
+
+    def generate(self, seed: int = 0) -> ServingWorkload:
+        if self.n_replicas < 2:
+            raise ValueError("OutageSpec needs n_replicas >= 2 (with one "
+                             "replica an outage is just a dead origin)")
+        if not 0.0 < self.outage_frac * self.n_outages <= 0.75:
+            raise ValueError("outage windows must fit the middle of the "
+                             "trace: need 0 < n_outages * outage_frac <= 0.75")
+        rng = np.random.default_rng(seed)
+        times = np.cumsum(rng.exponential(1.0 / self.rate, self.n_requests))
+        keys = rng.choice(self.n_keys, self.n_requests,
+                          p=_zipf_probs(self.n_keys, self.zipf_alpha))
+        tok = _tokens_per_key(rng, self.n_keys)
+        duration = float(times[-1])
+        # disjoint slots over the middle 75% of the horizon
+        slot = 0.75 / self.n_outages
+        outages = []
+        for j in range(self.n_outages):
+            lo = 0.15 + j * slot
+            start = lo + rng.uniform(0.0, max(slot - self.outage_frac, 0.0))
+            replica = int(rng.integers(self.n_replicas))
+            outages.append((replica, start * duration,
+                            (start + self.outage_frac) * duration))
+        return ServingWorkload(
+            times=times.astype(np.float64), keys=keys.astype(np.int64),
+            n_tokens=tok[keys].astype(np.int32),
+            burst_mask=np.zeros(self.n_requests, bool),
+            latency_scale=_identity_scale, rate_fn=lambda t: self.rate,
+            name="origin_outage", spec=self,
+            n_replicas=self.n_replicas, outages=tuple(outages))
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradedReplicaSpec:
+    """The brownout scenario re-posed with replica structure: the same
+    stationary arrivals and ``(start_frac, duration_frac)`` episodes as
+    :class:`BrownoutSpec`, but each episode degrades exactly ONE of
+    ``n_replicas`` origins (drawn per episode), exposed as per-replica
+    ``replica_scales`` schedules.  PR 6 recorded the single-origin
+    brownout as SLO-unattainable because both hedge legs sampled the same
+    degraded origin; here the hedge leg lands on an *independent* replica
+    — the substrate for the robustness headline (DESIGN.md §15)."""
+
+    n_requests: int = 20_000
+    n_keys: int = 2_000
+    zipf_alpha: float = 0.9
+    rate: float = 2_000.0
+    severity: float = 4.0
+    episodes: tuple = ((0.3, 0.1), (0.7, 0.15))
+    n_replicas: int = 3
+
+    def generate(self, seed: int = 0) -> ServingWorkload:
+        if self.severity <= 0.0:
+            raise ValueError("severity must be positive")
+        if self.n_replicas < 2:
+            raise ValueError("DegradedReplicaSpec needs n_replicas >= 2; "
+                             "use BrownoutSpec for the single-origin case")
+        rng = np.random.default_rng(seed)
+        times = np.cumsum(rng.exponential(1.0 / self.rate, self.n_requests))
+        keys = rng.choice(self.n_keys, self.n_requests,
+                          p=_zipf_probs(self.n_keys, self.zipf_alpha))
+        tok = _tokens_per_key(rng, self.n_keys)
+        duration = float(times[-1])
+        per_replica: list[list] = [[] for _ in range(self.n_replicas)]
+        for s, d in self.episodes:
+            replica = int(rng.integers(self.n_replicas))
+            per_replica[replica].append((s * duration, (s + d) * duration))
+        scales = tuple(_piecewise_scale(tuple(w), self.severity)
+                       for w in per_replica)
+        return ServingWorkload(
+            times=times.astype(np.float64), keys=keys.astype(np.int64),
+            n_tokens=tok[keys].astype(np.int32),
+            burst_mask=np.zeros(self.n_requests, bool),
+            latency_scale=_identity_scale, rate_fn=lambda t: self.rate,
+            name="degraded_replica", spec=self,
+            n_replicas=self.n_replicas, replica_scales=scales)
+
+
 SCENARIOS: dict[str, type] = {
     "diurnal": DiurnalSpec,
     "flash_crowd": FlashCrowdSpec,
     "zipf_drift": ZipfDriftSpec,
     "brownout": BrownoutSpec,
+    "origin_outage": OutageSpec,
+    "degraded_replica": DegradedReplicaSpec,
 }
 
 

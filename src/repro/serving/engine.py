@@ -32,17 +32,34 @@ step with the origin (DESIGN.md §12).  Delayed-hit waiter queues
 compose across tiers exactly as in :mod:`repro.core.hierarchy`; hedging at
 the L1 is disabled (only the L2's origin fetches are hedgeable — an L1
 "fetch" is a queue position at the L2, and duplicating it cannot win).
+
+Fault-tolerant mode (DESIGN.md §15): pass a :class:`ReplicaSet` (N
+independent origins, each with its own latency model, RNG stream, and
+time-varying health) and/or a :class:`~repro.serving.faults.FaultPlan`
+(seeded fetch failures, quantile-derived timeouts, replica outages) and
+a miss resolves a full **retry chain** — primary attempt on a rotating
+replica, hedge leg issued to a *different* replica, capped-exponential
+backoff between attempts, retry-budget accounting — deterministically at
+issue time; only the chain's resolution event rides the heap, under the
+same staleness discipline as hedged losers.  A
+:class:`~repro.serving.faults.DegradePolicy` adds graceful degradation:
+requests past the waiter-depth or in-flight bounds are shed (recorded
+outcome) instead of queued unboundedly.  With none of the three
+configured the engine takes the exact legacy code path.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from typing import Any, Callable
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ranking import POLICIES, PolicyParams
 from repro.core.state import ObjStats
+from repro.serving.faults import DegradePolicy, FaultPlan
 
 
 @dataclasses.dataclass
@@ -73,9 +90,60 @@ class LatencyModel:
         m = self.mean(n_tokens, t)
         return float(rng.exponential(m)) if self.stochastic else m
 
+    def quantile_s(self, q: float, n_tokens: int,
+                   t: float | None = None) -> float:
+        """Exp quantile of the (scaled) latency at issue time t:
+        -m * ln(1 - q).  Hedge deadlines and fault-plan timeouts both
+        derive from this (DESIGN.md §15)."""
+        return -self.mean(n_tokens, t) * float(np.log(1 - q))
+
     def hedge_deadline(self, n_tokens: int, t: float | None = None) -> float:
-        # Exp quantile: -m * ln(1 - q)
-        return -self.mean(n_tokens, t) * float(np.log(1 - self.hedge_quantile))
+        return self.quantile_s(self.hedge_quantile, n_tokens, t)
+
+
+class ReplicaSet:
+    """N independent origin replicas (DESIGN.md §15).
+
+    Each replica owns a :class:`LatencyModel` (its health: a per-replica
+    ``scale_fn`` degradation schedule) and an independent RNG stream
+    spawned deterministically from ``(seed, replica_idx)`` — so one
+    replica's draw history never perturbs another's, and hedging or
+    retrying on a different replica samples genuinely independent (and
+    possibly differently degraded) latency.  Primary selection rotates
+    round-robin per miss episode; retries walk the ring; the hedge leg
+    always goes to the next *different* replica, which is what lets the
+    engine route around correlated degradation (the PR-6 brownout
+    negative this class exists to fix).
+    """
+
+    def __init__(self, models, seed: int = 0):
+        self.models: tuple[LatencyModel, ...] = tuple(models)
+        if not self.models:
+            raise ValueError("ReplicaSet needs at least one replica")
+        self.seed = seed
+        self.rngs = [np.random.default_rng([seed, r])
+                     for r in range(len(self.models))]
+
+    @classmethod
+    def uniform(cls, n: int, latency: LatencyModel, scale_fns=None,
+                seed: int = 0) -> "ReplicaSet":
+        """n replicas sharing ``latency``'s parameters, each optionally
+        with its own health schedule ``scale_fns[r]``."""
+        if scale_fns is not None and len(scale_fns) != n:
+            raise ValueError("need one scale_fn per replica")
+        return cls((dataclasses.replace(
+            latency, scale_fn=scale_fns[r] if scale_fns else latency.scale_fn)
+            for r in range(n)), seed=seed)
+
+    @property
+    def n(self) -> int:
+        return len(self.models)
+
+    def model(self, r: int) -> LatencyModel:
+        return self.models[r]
+
+    def rng(self, r: int) -> np.random.Generator:
+        return self.rngs[r]
 
 
 @dataclasses.dataclass
@@ -87,6 +155,7 @@ class PrefixEntry:
     complete_t: float = np.inf    # in-flight completion time (sim clock)
     issue_t: float = 0.0
     waiters: int = 0
+    failed: bool = False          # retry chain exhausted: resolves, not admits
 
 
 @dataclasses.dataclass
@@ -98,13 +167,24 @@ class EngineStats:
     hedges: int = 0
     total_latency: float = 0.0
     prefill_tokens: int = 0
+    # fault-tolerance accounting (DESIGN.md §15); all zero on the legacy
+    # path so existing consumers see unchanged dicts modulo new keys
+    shed: int = 0                 # requests refused by the DegradePolicy
+    failed: int = 0               # requests resolved by a failed fetch
+    retries: int = 0              # retry attempts actually issued
+    timeouts: int = 0             # attempts abandoned at the client timeout
+    fault_failures: int = 0       # attempts killed by outage/injected fault
+    gaveup: int = 0               # fetch episodes that exhausted retries
 
     def as_dict(self) -> dict:
         n = max(self.hits + self.delayed_hits + self.misses, 1)
         return dict(hits=self.hits, delayed_hits=self.delayed_hits,
                     misses=self.misses, evictions=self.evictions,
                     hedges=self.hedges, total_latency=self.total_latency,
-                    mean_latency=self.total_latency / n)
+                    mean_latency=self.total_latency / n,
+                    shed=self.shed, failed=self.failed,
+                    retries=self.retries, timeouts=self.timeouts,
+                    fault_failures=self.fault_failures, gaveup=self.gaveup)
 
 
 class DelayedHitPrefixCache:
@@ -125,6 +205,11 @@ class DelayedHitPrefixCache:
         self.key_to_idx: dict[str, int] = {}
         self.entries: dict[int, PrefixEntry] = {}
         self.free_idx = list(range(max_objects))
+        # preallocated rank-time sizes vector, maintained incrementally on
+        # admit/evict/reclaim (resident entries carry their true size,
+        # everything else 1.0 — exactly what ranks() used to rebuild per
+        # call on the event loop's hot path)
+        self._sizes = np.ones(max_objects, np.float32)
         f = lambda v: np.full(max_objects, v, np.float32)
         self.obj = ObjStats(
             cached=np.zeros(max_objects, bool),
@@ -138,9 +223,52 @@ class DelayedHitPrefixCache:
     def idx(self, key: str) -> int:
         if key not in self.key_to_idx:
             if not self.free_idx:
-                raise RuntimeError("prefix table full")
-            self.key_to_idx[key] = self.free_idx.pop()
+                i = self._reclaim()
+                if i is None:
+                    raise RuntimeError(
+                        "prefix table full (every slot cached or in flight)")
+                self.key_to_idx[key] = i
+            else:
+                self.key_to_idx[key] = self.free_idx.pop()
         return self.key_to_idx[key]
+
+    def _reclaim(self) -> int | None:
+        """Reclaim the stalest *dead* slot — a key that is tracked but
+        neither cached nor in-flight (admission failed, or it was touched
+        and never fetched).  Long adversarial traces full of one-hit keys
+        used to exhaust ``max_objects`` and crash here; now the table
+        recycles.  Returns None only when every slot is live."""
+        o = self.obj
+        victim_key, victim_i, victim_t = None, None, math.inf
+        for k, i in self.key_to_idx.items():
+            if not o.cached[i] and not o.in_flight[i] \
+                    and o.last_access[i] < victim_t:
+                victim_key, victim_i, victim_t = k, i, float(o.last_access[i])
+        if victim_key is None:
+            return None
+        del self.key_to_idx[victim_key]
+        self._reset_slot(victim_i)
+        return victim_i
+
+    def _reset_slot(self, i: int) -> None:
+        """Restore slot ``i`` to its __init__ state so the next key
+        assigned to it starts with clean statistics."""
+        o = self.obj
+        o.cached[i] = False
+        o.in_flight[i] = False
+        o.complete_t[i] = np.inf
+        o.issue_t[i] = 0.0
+        o.last_access[i] = -np.inf
+        o.first_access[i] = -np.inf
+        o.gap_mean[i] = 0.0
+        o.count[i] = 0.0
+        o.z_est[i] = 0.05
+        o.agg_sum[i] = 0.0
+        o.agg_sq_sum[i] = 0.0
+        o.agg_cnt[i] = 0.0
+        o.episode_delay[i] = 0.0
+        o.gd_h[i] = 0.0
+        self._sizes[i] = 1.0
 
     def touch(self, key: str, t: float) -> int:
         i = self.idx(key)
@@ -159,11 +287,7 @@ class DelayedHitPrefixCache:
         return i
 
     def ranks(self, t: float) -> np.ndarray:
-        import jax.numpy as jnp
-        sizes = np.ones(self.n, np.float32)
-        for i, e in self.entries.items():
-            sizes[i] = e.size
-        return np.asarray(self.policy.rank(self.obj, jnp.asarray(sizes),
+        return np.asarray(self.policy.rank(self.obj, jnp.asarray(self._sizes),
                                            np.float32(t), self.params))
 
     def admit(self, entry: PrefixEntry, t: float,
@@ -196,14 +320,29 @@ class DelayedHitPrefixCache:
         if ok and self.free >= entry.size:
             o.cached[i] = True
             self.entries[i] = entry
+            self._sizes[i] = entry.size
             self.free -= entry.size
             return True
         return False
+
+    def fail_close(self, i: int, t: float) -> None:
+        """Close a *failed* fetch episode (retry chain exhausted): fold the
+        waiters' accumulated delay into the episode aggregates — they
+        really waited — without admitting and without a z_est update (no
+        successful fetch time was observed)."""
+        o = self.obj
+        ep = o.episode_delay[i]
+        o.agg_sum[i] += ep
+        o.agg_sq_sum[i] += ep * ep
+        o.agg_cnt[i] += 1.0
+        o.episode_delay[i] = 0.0
+        o.in_flight[i] = False
 
     def evict(self, i: int) -> None:
         e = self.entries.pop(i)
         self.obj.cached[i] = False
         self.free += e.size
+        self._sizes[i] = 1.0
         del self.key_to_idx[e.key]
         self.free_idx.append(i)
 
@@ -218,19 +357,31 @@ class ServeEngine:
                  state_size_fn: Callable[[int], float] | None = None,
                  hedging: bool = True, seed: int = 0,
                  l2: "ServeEngine | None" = None,
-                 hop_s: "float | Callable[[float], float]" = 0.0):
-        self.cache = DelayedHitPrefixCache(capacity, policy, params)
+                 hop_s: "float | Callable[[float], float]" = 0.0,
+                 replicas: ReplicaSet | None = None,
+                 faults: FaultPlan | None = None,
+                 degrade: DegradePolicy | None = None,
+                 max_objects: int = 4096):
+        self.cache = DelayedHitPrefixCache(capacity, policy, params,
+                                           max_objects=max_objects)
         self.latency = latency or LatencyModel()
         self.prefill_fn = prefill_fn           # real-model hook (optional)
         self.state_size = state_size_fn or (lambda n_tok: float(n_tok))
         self.hedging = hedging
         self.l2 = l2                # shared second tier (hierarchy mode)
         self.hop_s = hop_s          # round-trip L1<->L2 hop delay
+        self.replicas = replicas    # independent origins (DESIGN.md §15)
+        self.faults = faults        # deterministic fault-injection plan
+        self.degrade = degrade      # overload shedding bounds
         self.rng = np.random.default_rng(seed)
         self.stats = EngineStats()
         self.events: list[tuple[float, int, str]] = []   # (t, idx, key)
         self.pending: dict[str, PrefixEntry] = {}
         self._seq = 0
+        self._rr = 0                # round-robin primary-replica cursor
+        self._fault_ctr = 0         # fault-plan decision counter
+        self._retry_tokens = (faults.retry_budget
+                              if faults is not None else None)
 
     # --- event machinery (sim clock) -----------------------------------
     def _commit_due(self, t: float) -> None:
@@ -243,33 +394,168 @@ class ServeEngine:
                 # pending entry, if any, belongs to the newer fetch
                 continue
             del self.pending[key]
+            if e.failed:
+                # retry chain exhausted: close the episode, never admit —
+                # in_flight clears so the key can re-miss afresh
+                self.cache.fail_close(self.cache.key_to_idx[key], t_c)
+                continue
             if self.prefill_fn is not None:
                 e.state = self.prefill_fn(key, e.n_tokens)
             self.cache.admit(e, t_c, self.stats)
 
-    def request(self, t: float, prefix_key: str, n_tokens: int) -> float:
-        """Serve a request at sim time t; returns its queueing latency."""
+    # --- fault-tolerant fetch resolution (DESIGN.md §15) ----------------
+    def _origin(self, r: int) -> tuple[LatencyModel, np.random.Generator]:
+        if self.replicas is None:
+            return self.latency, self.rng
+        return self.replicas.model(r), self.replicas.rng(r)
+
+    def _resolve_fetch(self, t: float, n_tokens: int) -> tuple[float, bool]:
+        """Resolve a miss's full retry chain eagerly at issue time;
+        returns ``(resolution_time, ok)``.
+
+        Attempt k runs on replica ``(primary + k) % R`` (primary rotates
+        round-robin per episode).  Each attempt: draw the primary leg
+        from that replica's model and RNG stream; overlay the fault plan
+        (outage -> fail fast; injected failure -> the leg dies at
+        ``u * z`` partway through); if hedging is on and the primary leg
+        is unresolved at the hedge deadline, issue a hedge leg to the
+        next *different* replica (subject to that replica's outages —
+        injected failures apply to primary legs only); the attempt times
+        out at the plan's quantile-derived deadline.  Failed attempts
+        retry after capped exponential backoff with deterministic jitter
+        while the budget lasts.  Every random input comes from either a
+        per-replica RNG stream (latency) or the plan's counter hash
+        (fault decisions), so the chain is a pure function of
+        ``(engine seed, plan)`` — the determinism contract of
+        tests/test_faults.py.
+
+        Deadlines are CLIENT-side beliefs: the hedge deadline and the
+        timeout derive from the engine's own ``self.latency`` model
+        (scaled only by degradation the client can observe), while draws
+        are origin truths from the replica's model with its private
+        health schedule.  A secretly degraded replica therefore blows
+        its client-side deadline more often — which is exactly the
+        signal that hedges and retries route around (DESIGN.md §15);
+        scaling the deadline by the replica's own degradation, as the
+        single-origin hedge path does, would suppress it.
+        """
+        plan = self.faults
+        n_rep = 1 if self.replicas is None else self.replicas.n
+        primary = self._rr % n_rep
+        self._rr += 1
+        max_attempts = 1 + (plan.max_retries if plan is not None else 0)
+        a = t
+        for k in range(max_attempts):
+            r = (primary + k) % n_rep
+            model, rng = self._origin(r)
+            z = model.draw(rng, n_tokens, a)
+            # primary-leg fault overlay
+            fail_rel, fail_kind = math.inf, None
+            if plan is not None:
+                if plan.in_outage(r, a):
+                    fail_rel, fail_kind = plan.outage_detect_s, "fault"
+                elif plan.fail_prob > 0.0:
+                    self._fault_ctr += 1
+                    if plan.u01(self._fault_ctr) < plan.fail_prob:
+                        self._fault_ctr += 1
+                        # the fetch dies partway through: u*z < z always
+                        fail_rel = plan.u01(self._fault_ctr) * z
+                        fail_kind = "fault"
+            primary_ok = fail_kind is None
+            primary_end = z if primary_ok else fail_rel
+            legs = [(primary_end, primary_ok)]
+            # hedge leg: fires iff the primary is still unresolved at the
+            # deadline; always to a different replica when one exists
+            if self.hedging:
+                deadline = self.latency.hedge_deadline(n_tokens, a)
+                if primary_end > deadline:
+                    r2 = (r + 1) % n_rep if n_rep > 1 else r
+                    m2, rng2 = self._origin(r2)
+                    if plan is not None and plan.in_outage(r2, a + deadline):
+                        legs.append((deadline + plan.outage_detect_s, False))
+                    else:
+                        z2 = m2.draw(rng2, n_tokens, a + deadline)
+                        legs.append((deadline + z2, True))
+                    self.stats.hedges += 1
+            tmo = (plan.timeout_s(self.latency.mean(n_tokens, a))
+                   if plan is not None else math.inf)
+            success_rel = min((e for e, ok in legs if ok), default=math.inf)
+            if success_rel <= tmo and success_rel < math.inf:
+                return a + success_rel, True
+            # attempt failed: at the timeout if a leg was still pending,
+            # else when the last leg died
+            if success_rel < math.inf or tmo < max(
+                    (e for e, ok in legs if not ok), default=0.0):
+                end_rel, kind = tmo, "timeout"
+            else:
+                end_rel = max(e for e, ok in legs if not ok)
+                kind = fail_kind or "fault"
+            if kind == "timeout":
+                self.stats.timeouts += 1
+            else:
+                self.stats.fault_failures += 1
+            fail_t = a + end_rel
+            if k + 1 >= max_attempts:
+                break
+            if self._retry_tokens is not None:
+                if self._retry_tokens <= 0:
+                    break
+                self._retry_tokens -= 1
+            self.stats.retries += 1
+            self._fault_ctr += 1
+            a = fail_t + plan.backoff_s(k, plan.u01(self._fault_ctr))
+        self.stats.gaveup += 1
+        return fail_t, False
+
+    # --- request path ---------------------------------------------------
+    def serve(self, t: float, prefix_key: str,
+              n_tokens: int) -> tuple[str, float]:
+        """Serve a request at sim time t; returns ``(outcome, latency)``.
+
+        Outcome is one of ``hit`` / ``delayed`` / ``miss`` / ``shed`` /
+        ``failed``: ``shed`` means the DegradePolicy refused the request
+        (no queueing, latency 0 — report the shed *rate*, never fold the
+        zero into latency percentiles); ``failed`` means the request's
+        fetch episode exhausted its retry chain (the latency is the time
+        until the client learned of the failure).
+        """
         self._commit_due(t)
         c = self.cache
         i = c.touch(prefix_key, t)
         o = c.obj
         if o.cached[i]:
             self.stats.hits += 1
-            return 0.0
+            return "hit", 0.0
         if o.in_flight[i]:
+            e = self.pending[prefix_key]
+            if self.degrade is not None \
+                    and e.waiters + 1 > self.degrade.max_waiters:
+                self.stats.shed += 1
+                return "shed", 0.0
             lat = max(float(o.complete_t[i]) - t, 0.0)
             o.episode_delay[i] += lat
             self.stats.delayed_hits += 1
-            self.pending[prefix_key].waiters += 1
+            e.waiters += 1
             self.stats.total_latency += lat
-            return lat
+            if e.failed:
+                self.stats.failed += 1
+                return "failed", lat
+            return "delayed", lat
         # miss: issue the prefill "fetch" — in hierarchy mode its duration
         # is hop + the shared L2's resolution time, so L1 waiters queue on a
         # completion that embeds the L2's own delayed-hit queueing.
+        if self.degrade is not None \
+                and len(self.pending) >= self.degrade.max_in_flight:
+            self.stats.shed += 1
+            return "shed", 0.0
+        ok = True
         loser_comp = None
         if self.l2 is not None:
             hop = self.hop_s(t) if callable(self.hop_s) else self.hop_s
             z = hop + self.l2.request(t, prefix_key, n_tokens)
+        elif self.replicas is not None or self.faults is not None:
+            comp_t, ok = self._resolve_fetch(t, n_tokens)
+            z = comp_t - t
         else:
             z = self.latency.draw(self.rng, n_tokens, t)
             if self.hedging:
@@ -291,7 +577,7 @@ class ServeEngine:
         o.episode_delay[i] = z
         entry = PrefixEntry(prefix_key, n_tokens,
                             self.state_size(n_tokens), complete_t=comp,
-                            issue_t=t)
+                            issue_t=t, failed=not ok)
         self.pending[prefix_key] = entry
         self._seq += 1
         heapq.heappush(self.events, (comp, self._seq, prefix_key))
@@ -299,9 +585,16 @@ class ServeEngine:
             self._seq += 1
             heapq.heappush(self.events, (loser_comp, self._seq, prefix_key))
         self.stats.misses += 1
-        self.stats.prefill_tokens += n_tokens
         self.stats.total_latency += z
-        return z
+        if not ok:
+            self.stats.failed += 1
+            return "failed", z
+        self.stats.prefill_tokens += n_tokens
+        return "miss", z
+
+    def request(self, t: float, prefix_key: str, n_tokens: int) -> float:
+        """Serve a request at sim time t; returns its queueing latency."""
+        return self.serve(t, prefix_key, n_tokens)[1]
 
     def run_trace(self, times, keys, lengths) -> EngineStats:
         for t, k, n in zip(times, keys, lengths):

@@ -41,12 +41,23 @@ def test_depth_summary_and_hist():
 def test_drive_records_only_measured_segment():
     w = make_scenario("flash_crowd", seed=1, n_requests=400, n_keys=40)
     eng = bench_serving._make_engine(w, hedging=False, hier=False)
-    sq, depth, wall, n_meas = bench_serving._drive(w, eng)
+    sq, depth, wall, n_meas, shed, failed = bench_serving._drive(w, eng)
     warm = int(bench_serving.WARMUP_FRAC * 400)
     assert n_meas == 400 - warm
+    assert (shed, failed) == (0, 0)        # no fault config on this path
     assert sq.count == n_meas
     assert wall >= 0.0
     assert int(depth.sum()) <= eng.stats.delayed_hits
+
+
+def test_drive_excludes_shed_and_failed_from_sketch():
+    w = make_scenario("origin_outage", seed=3, n_requests=600, n_keys=60)
+    eng = bench_serving._make_engine(w, hedging=True, hier=False)
+    assert eng.replicas is not None and eng.faults is not None
+    assert eng.latency.hedge_quantile == bench_serving.REPLICA_HEDGE_QUANTILE
+    sq, _, _, n_meas, shed, failed = bench_serving._drive(w, eng)
+    # the sketch only holds served requests; shed/failed are counted out
+    assert sq.count == n_meas - shed - failed
 
 
 def test_hier_engine_shares_one_l2_and_scales_hop():
@@ -62,9 +73,10 @@ def test_hier_engine_shares_one_l2_and_scales_hop():
 
 @pytest.mark.slow
 def test_bench_serving_smoke_end_to_end(tmp_path):
-    """The CI-sized benchmark run end-to-end: >= 2 scenarios x hedging
-    on/off, SLO-search rows, hierarchy rows, and a JSON snapshot that
-    passes the --check-bench serving canary + history lint."""
+    """The CI-sized benchmark run end-to-end: 3 scenarios (one legacy,
+    both fault-injection ones) x hedging on/off, SLO-search rows,
+    hierarchy rows, and a JSON snapshot that passes the --check-bench
+    serving canary + history lint."""
     out = tmp_path / "bench_serving_smoke.json"
     rows = bench_serving.run(smoke=True, out=str(out))
     payload = json.loads(out.read_text())
@@ -73,12 +85,24 @@ def test_bench_serving_smoke_end_to_end(tmp_path):
     _check_history(payload, "bench_serving_smoke")
     single = [r for r in rows if r["mode"] == "single"]
     assert {(r["scenario"], r["hedging"]) for r in single} == {
-        (s, h) for s in bench_serving.HEADLINE_SCENARIOS
+        (s, h) for s in ("flash_crowd", "degraded_replica", "origin_outage")
         for h in (True, False)}
     for r in single:
         assert r["p50_ms"] <= r["p95_ms"] <= r["p99_ms"] <= r["p999_ms"]
-        assert r["hits"] + r["delayed_hits"] + r["misses"] == r["n_requests"]
+        # shed requests leave the hit/delayed/miss buckets but must stay
+        # accounted for; failed requests are an overlay on delayed+miss
+        assert r["hits"] + r["delayed_hits"] + r["misses"] + r["shed"] \
+            == r["n_requests"]
+        assert isinstance(r["shed_rate"], float)
+        assert isinstance(r["fail_rate"], float)
+    rep = [r for r in single if r["scenario"] != "flash_crowd"]
+    assert all(r["n_replicas"] == 3 for r in rep)
+    outage = [r for r in rep if r["scenario"] == "origin_outage"]
+    assert all(r["fault_failures"] > 0 for r in outage)  # outages were hit
     slo = [r for r in rows if r["mode"] == "slo_search"]
-    assert len(slo) == 4
+    assert {(r["scenario"], r["hedging"]) for r in slo} == {
+        (s, h) for s in ("flash_crowd", "degraded_replica")
+        for h in (True, False)}
     for r in slo:
         assert r["req_s_at_slo"] >= 0.0
+        assert r["slo_err_budget"] == bench_serving.SLO_ERR_BUDGET

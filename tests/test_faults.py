@@ -1,0 +1,307 @@
+"""Fault-tolerant serving: fault plans, replica routing, retry/backoff,
+graceful degradation, and the bitwise determinism contract (DESIGN.md §15).
+
+The load-bearing property is the last one: a fault-injected run is a pure
+function of ``(engine seed, FaultPlan)`` — identical configuration must
+reproduce :class:`EngineStats` *and* the percentile sketch bitwise, across
+the hedged, hierarchy, and shedding paths.  Everything the benchmark
+claims about robustness rests on that reproducibility.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.percentile import StreamingQuantile
+from repro.serving.engine import LatencyModel, ReplicaSet, ServeEngine
+from repro.serving.faults import DegradePolicy, FaultPlan, splitmix64
+
+
+# --- FaultPlan unit contracts ------------------------------------------
+def test_u01_deterministic_in_unit_interval():
+    plan = FaultPlan(seed=7)
+    us = [plan.u01(c) for c in range(1000)]
+    assert all(0.0 < u < 1.0 for u in us)
+    assert us == [FaultPlan(seed=7).u01(c) for c in range(1000)]
+    assert us != [FaultPlan(seed=8).u01(c) for c in range(1000)]
+    # counter-keyed: each decision index has its own value
+    assert len(set(us)) == len(us)
+
+
+def test_splitmix64_stays_in_64_bits():
+    x = 2**64 - 1
+    for _ in range(100):
+        x = splitmix64(x)
+        assert 0 <= x < 2**64
+
+
+def test_in_outage_window_boundaries():
+    plan = FaultPlan(outages=((1, 2.0, 3.0), (0, 5.0, 6.0)))
+    assert not plan.in_outage(1, 1.999)
+    assert plan.in_outage(1, 2.0)          # inclusive start
+    assert plan.in_outage(1, 2.999)
+    assert not plan.in_outage(1, 3.0)      # exclusive end
+    assert not plan.in_outage(0, 2.5)      # other replica unaffected
+    assert plan.in_outage(0, 5.5)
+
+
+def test_backoff_capped_exponential_with_bounded_jitter():
+    plan = FaultPlan(backoff_base_s=0.01, backoff_cap_s=0.08)
+    for k in range(8):
+        nominal = min(0.01 * 2.0**k, 0.08)
+        lo = plan.backoff_s(k, 1e-12)
+        hi = plan.backoff_s(k, 1.0 - 1e-12)
+        assert lo == pytest.approx(0.5 * nominal)
+        assert hi == pytest.approx(nominal)
+        assert lo > 0.0
+
+
+def test_timeout_is_model_quantile():
+    plan = FaultPlan(timeout_quantile=0.995)
+    mean = 0.040
+    assert plan.timeout_s(mean) == pytest.approx(-mean * math.log(0.005))
+    assert FaultPlan(timeout_quantile=None).timeout_s(mean) == math.inf
+
+
+def test_plan_and_policy_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(fail_prob=1.0)
+    with pytest.raises(ValueError):
+        FaultPlan(timeout_quantile=0.0)
+    with pytest.raises(ValueError):
+        FaultPlan(max_retries=-1)
+    with pytest.raises(ValueError):
+        FaultPlan(outages=((0, 3.0, 2.0),))
+    with pytest.raises(ValueError):
+        DegradePolicy(max_waiters=0)
+    with pytest.raises(ValueError):
+        ReplicaSet(())
+    with pytest.raises(ValueError):
+        ReplicaSet.uniform(3, LatencyModel(), scale_fns=[lambda t: 1.0])
+
+
+def test_replica_rng_streams_are_independent_and_seeded():
+    a = ReplicaSet.uniform(3, LatencyModel(), seed=5)
+    b = ReplicaSet.uniform(3, LatencyModel(), seed=5)
+    draws_a = [a.rng(r).standard_normal(4).tolist() for r in range(3)]
+    draws_b = [b.rng(r).standard_normal(4).tolist() for r in range(3)]
+    assert draws_a == draws_b                      # seeded
+    assert draws_a[0] != draws_a[1] != draws_a[2]  # independent streams
+
+
+# --- engine behavior under faults --------------------------------------
+def _lat(base=0.05):
+    return LatencyModel(base_s=base, per_token_s=0.0)
+
+
+def test_outage_routed_around_via_retry_on_next_replica():
+    """Every fetch issued into replica-0's outage fails fast and retries
+    on the ring; with a healthy neighbor no request ever surfaces a
+    failure."""
+    eng = ServeEngine(capacity=1.0, policy="lru", latency=_lat(),
+                      state_size_fn=lambda n: 1.0, hedging=False, seed=0,
+                      replicas=ReplicaSet.uniform(2, _lat(), seed=0),
+                      faults=FaultPlan(outages=((0, 0.0, 1e9),)))
+    outcomes = [eng.serve(0.5 * i, f"k{i}", 10)[0] for i in range(40)]
+    assert "failed" not in outcomes
+    assert eng.stats.fault_failures > 0        # replica-0 attempts died
+    assert eng.stats.retries > 0               # and were retried
+    assert eng.stats.gaveup == 0
+
+
+def test_all_replicas_down_exhausts_retries_and_fails():
+    eng = ServeEngine(capacity=1.0, policy="lru", latency=_lat(),
+                      state_size_fn=lambda n: 1.0, hedging=True, seed=0,
+                      replicas=ReplicaSet.uniform(2, _lat(), seed=0),
+                      faults=FaultPlan(outages=((0, 0.0, 1e9),
+                                                (1, 0.0, 1e9)),
+                                       max_retries=2))
+    outcome, lat = eng.serve(0.0, "k", 10)
+    assert outcome == "failed"
+    assert lat > 0.0                       # the client waited to learn it
+    assert eng.stats.gaveup == 1
+    assert eng.stats.failed == 1
+    # the failed episode resolves through the heap without admitting —
+    # the key can then re-miss afresh
+    outcome2, _ = eng.serve(lat + 1.0, "k", 10)
+    assert outcome2 == "failed"
+    assert eng.stats.misses == 2
+    assert not eng.cache.obj.cached[eng.cache.key_to_idx["k"]]
+
+
+def test_waiters_on_failed_fetch_see_failed_outcome():
+    eng = ServeEngine(capacity=1.0, policy="lru",
+                      latency=_lat(),
+                      state_size_fn=lambda n: 1.0, hedging=False, seed=0,
+                      replicas=ReplicaSet.uniform(1, _lat(), seed=0),
+                      faults=FaultPlan(outages=((0, 0.0, 1e9),),
+                                       max_retries=1))
+    o0, lat0 = eng.serve(0.0, "k", 10)
+    o1, lat1 = eng.serve(lat0 * 0.5, "k", 10)     # joins the doomed fetch
+    assert (o0, o1) == ("failed", "failed")
+    assert lat1 == pytest.approx(lat0 * 0.5)
+    assert eng.stats.delayed_hits == 1 and eng.stats.failed == 2
+
+
+def test_retry_budget_zero_disables_retries():
+    eng = ServeEngine(capacity=1.0, policy="lru", latency=_lat(),
+                      state_size_fn=lambda n: 1.0, hedging=False, seed=0,
+                      replicas=ReplicaSet.uniform(2, _lat(), seed=0),
+                      faults=FaultPlan(outages=((0, 0.0, 1e9),),
+                                       retry_budget=0))
+    outcomes = [eng.serve(1.0 * i, f"k{i}", 10)[0] for i in range(10)]
+    assert eng.stats.retries == 0
+    # primaries rotate: replica-0 episodes fail outright, replica-1 serve
+    assert outcomes.count("failed") == 5
+    assert eng.stats.gaveup == 5
+
+
+def test_hedge_leg_goes_to_a_different_replica():
+    """Replica 0 is secretly 1000x degraded, no retries, no timeout: a
+    fetch whose primary lands there can only resolve fast if its hedge
+    leg escaped to the healthy replica 1 — a same-replica hedge (the
+    single-origin behavior) would itself draw the 1000x latency."""
+    slow = [lambda t: 1000.0, lambda t: 1.0]
+    eng = ServeEngine(capacity=100.0, policy="lru", latency=_lat(),
+                      state_size_fn=lambda n: 1.0, hedging=True, seed=0,
+                      replicas=ReplicaSet.uniform(2, _lat(),
+                                                  scale_fns=slow, seed=0),
+                      faults=FaultPlan(max_retries=0,
+                                       timeout_quantile=None))
+    # primary rotates 0,1,0,1,...: even episodes land on the slow replica
+    lats = [eng.serve(100.0 * i, f"k{i}", 10)[1] for i in range(20)]
+    assert eng.stats.failed == 0
+    assert eng.stats.hedges >= 10      # every slow-primary episode hedged
+    # client deadline (~0.15 s) + a healthy draw: nowhere near the ~50 s a
+    # same-replica hedge would typically take
+    assert max(lats) < 5.0
+
+
+def test_degrade_policy_sheds_waiters_and_in_flight():
+    eng = ServeEngine(capacity=1.0, policy="lru",
+                      latency=LatencyModel(base_s=100.0, per_token_s=0.0,
+                                           stochastic=False),
+                      state_size_fn=lambda n: 1.0, hedging=False, seed=0,
+                      degrade=DegradePolicy(max_waiters=2, max_in_flight=2))
+    assert eng.serve(0.0, "a", 10)[0] == "miss"
+    assert eng.serve(0.1, "a", 10)[0] == "delayed"
+    assert eng.serve(0.2, "a", 10)[0] == "delayed"
+    assert eng.serve(0.3, "a", 10)[0] == "shed"    # waiter bound
+    assert eng.serve(0.4, "b", 10)[0] == "miss"
+    assert eng.serve(0.5, "c", 10)[0] == "shed"    # in-flight bound
+    s = eng.stats
+    assert s.shed == 2
+    # accounting identity: every request lands in exactly one bucket
+    assert s.hits + s.delayed_hits + s.misses + s.shed == 6
+
+
+def test_legacy_engine_unchanged_without_fault_config():
+    """No replicas/faults/degrade: the engine must keep the exact legacy
+    behavior (deterministic model, hedging math, event bookkeeping)."""
+    eng = ServeEngine(capacity=10.0, policy="lru",
+                      latency=LatencyModel(base_s=1.0, per_token_s=0.0,
+                                           stochastic=False),
+                      state_size_fn=lambda n: 1.0, hedging=False)
+    assert eng.serve(0.0, "p", 8) == ("miss", 1.0)
+    assert eng.serve(0.5, "p", 8) == ("delayed", 0.5)
+    assert eng.serve(2.0, "p", 8) == ("hit", 0.0)
+    d = eng.stats.as_dict()
+    assert (d["shed"], d["failed"], d["retries"], d["gaveup"]) == (0,) * 4
+
+
+# --- the determinism contract ------------------------------------------
+def _trace(n=1200, seed=123):
+    rng = np.random.default_rng(seed)
+    times = np.cumsum(rng.exponential(0.01, n))
+    keys = rng.zipf(1.3, n) % 60
+    toks = rng.integers(8, 256, n)
+    return times, keys, toks
+
+
+def _sketch_state(sq):
+    s = sq.summary()           # flushes the buffer first
+    return (sq.counts.tobytes(), int(sq.zero_count), int(sq.count),
+            float(sq.sum), float(sq.min), float(sq.max),
+            s.p50, s.p99, s.p999)
+
+
+def _fault_run(*, hier=False):
+    """One full fault-injected run: replicas + outage + injected failures
+    + tight degrade bounds (so hedged, retry, failed, and shed paths all
+    execute), optionally with the replica set behind a shared L2."""
+    times, keys, toks = _trace()
+    scale_fns = [lambda t: 1.0,
+                 lambda t: 4.0 if 8.0 <= t < 16.0 else 1.0,
+                 lambda t: 1.0]
+    kw = dict(
+        replicas=ReplicaSet.uniform(3, _lat(0.03), scale_fns=scale_fns,
+                                    seed=9),
+        faults=FaultPlan(seed=9, fail_prob=0.08,
+                         outages=((2, 4.0, 9.0),), max_retries=2,
+                         retry_budget=200),
+        degrade=DegradePolicy(max_waiters=1, max_in_flight=16))
+    if hier:
+        l2 = ServeEngine(capacity=40.0, policy="lru", latency=_lat(0.03),
+                         state_size_fn=lambda n: 1.0, hedging=True,
+                         seed=1, **kw)
+        eng = ServeEngine(capacity=15.0, policy="lru",
+                          state_size_fn=lambda n: 1.0, hedging=True,
+                          seed=2, l2=l2, hop_s=0.004)
+    else:
+        eng = ServeEngine(capacity=25.0, policy="lru", latency=_lat(0.03),
+                          state_size_fn=lambda n: 1.0, hedging=True,
+                          seed=1, **kw)
+    sq = StreamingQuantile(rel_err=0.005, min_value=1e-6, max_value=1e5)
+    n_out = {"shed": 0, "failed": 0}
+    for t, k, n in zip(times, keys, toks):
+        outcome, lat = eng.serve(float(t), f"p{k}", int(n))
+        if outcome in n_out:
+            n_out[outcome] += 1
+        else:
+            sq.add(lat)
+    return eng, sq, n_out
+
+
+def test_fault_run_exercises_every_path():
+    eng, _, n_out = _fault_run()
+    s = eng.stats
+    assert s.hedges > 0 and s.retries > 0 and s.fault_failures > 0
+    assert n_out["shed"] > 0 and s.shed == n_out["shed"]
+    assert s.hits + s.delayed_hits + s.misses + s.shed == 1200
+
+
+def test_same_seed_and_plan_reproduce_stats_and_sketch_bitwise():
+    e1, q1, o1 = _fault_run()
+    e2, q2, o2 = _fault_run()
+    assert e1.stats == e2.stats        # dataclass equality, all counters
+    assert o1 == o2
+    assert _sketch_state(q1) == _sketch_state(q2)
+
+
+def test_hierarchy_fault_run_reproduces_bitwise():
+    e1, q1, o1 = _fault_run(hier=True)
+    e2, q2, o2 = _fault_run(hier=True)
+    assert e1.stats == e2.stats
+    assert e1.l2.stats == e2.l2.stats
+    assert e1.l2.stats.fault_failures > 0      # faults live at the L2
+    assert o1 == o2
+    assert _sketch_state(q1) == _sketch_state(q2)
+
+
+def test_different_plan_seed_changes_the_run():
+    times, keys, toks = _trace(600)
+
+    def run(plan_seed):
+        eng = ServeEngine(capacity=25.0, policy="lru", latency=_lat(0.03),
+                          state_size_fn=lambda n: 1.0, hedging=True,
+                          seed=1,
+                          replicas=ReplicaSet.uniform(2, _lat(0.03),
+                                                      seed=9),
+                          faults=FaultPlan(seed=plan_seed, fail_prob=0.3,
+                                           max_retries=1))
+        for t, k, n in zip(times, keys, toks):
+            eng.serve(float(t), f"p{k}", int(n))
+        return eng.stats
+
+    assert run(0) != run(1)

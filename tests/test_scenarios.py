@@ -20,8 +20,9 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.data.scenarios import (SCENARIOS, BrownoutSpec, DiurnalSpec,
-                                  FlashCrowdSpec, ZipfDriftSpec,
+from repro.data.scenarios import (SCENARIOS, BrownoutSpec,
+                                  DegradedReplicaSpec, DiurnalSpec,
+                                  FlashCrowdSpec, OutageSpec, ZipfDriftSpec,
                                   make_scenario)
 
 _settings = dict(deadline=None, max_examples=10)
@@ -161,6 +162,48 @@ def test_brownout_scale_hook_piecewise(seed, severity):
     assert abs(float(inside.mean()) - 0.3) < 0.1
 
 
+@given(seed=st.integers(0, 2**16), n_outages=st.integers(1, 3))
+@settings(**_settings)
+def test_outage_windows_inside_horizon_and_reproducible(seed, n_outages):
+    spec = OutageSpec(n_requests=_N, n_outages=n_outages)
+    w = spec.generate(seed=seed)
+    assert w.n_replicas == spec.n_replicas
+    assert len(w.outages) == n_outages
+    prev_end = -1.0
+    for r, t0, t1 in w.outages:
+        assert 0 <= r < spec.n_replicas
+        assert 0.0 <= t0 < t1 <= w.duration + 1e-9
+        assert t0 >= prev_end      # windows are disjoint and ordered
+        prev_end = t1
+    # realized windows are part of the seed contract
+    assert w.outages == spec.generate(seed=seed).outages
+
+
+@given(seed=st.integers(0, 2**16), severity=st.floats(1.5, 10.0))
+@settings(**_settings)
+def test_degraded_replica_scales_hit_one_replica_per_episode(seed, severity):
+    spec = DegradedReplicaSpec(n_requests=_N, severity=severity)
+    w = spec.generate(seed=seed)
+    assert len(w.replica_scales) == spec.n_replicas
+    # the global hook stays identity — degradation is per-replica only
+    for t in (0.0, 0.35 * w.duration, 0.9 * w.duration):
+        assert w.latency_scale(t) == 1.0
+    d = w.duration
+    for s, dur in spec.episodes:
+        mid = (s + 0.5 * dur) * d
+        vals = [f(mid) for f in w.replica_scales]
+        # exactly one replica is degraded inside each episode
+        assert sorted(vals)[:-1] == [1.0] * (spec.n_replicas - 1)
+        assert max(vals) == severity
+    # outside every episode all replicas are healthy
+    assert all(f(0.05 * d) == 1.0 for f in w.replica_scales)
+    # per-replica schedules are part of the seed contract
+    w2 = spec.generate(seed=seed)
+    ts = np.linspace(0.0, d, 64)
+    for f, g in zip(w.replica_scales, w2.replica_scales):
+        assert [f(t) for t in ts] == [g(t) for t in ts]
+
+
 def test_unknown_scenario_rejected():
     with pytest.raises(KeyError):
         make_scenario("nope")
@@ -173,3 +216,9 @@ def test_bad_spec_params_rejected():
         FlashCrowdSpec(burst_fraction=1.0).generate()
     with pytest.raises(ValueError):
         BrownoutSpec(severity=0.0).generate()
+    with pytest.raises(ValueError):
+        OutageSpec(n_replicas=1).generate()
+    with pytest.raises(ValueError):
+        OutageSpec(n_outages=8, outage_frac=0.2).generate()
+    with pytest.raises(ValueError):
+        DegradedReplicaSpec(n_replicas=1).generate()

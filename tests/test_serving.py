@@ -9,7 +9,7 @@ import pytest
 from repro.configs import registry
 from repro.models import transformer as tf
 from repro.serving.engine import (DelayedHitPrefixCache, EngineStats,
-                                  LatencyModel, ServeEngine)
+                                  LatencyModel, PrefixEntry, ServeEngine)
 from repro.serving.scheduler import ContinuousBatcher, Request, SchedulerConfig
 from repro.training.train_loop import make_serve_steps
 
@@ -379,3 +379,50 @@ def test_continuous_batcher_matches_single_forward():
     b2.submit(r)
     b2.drain()
     assert r.out == toks[len(prompts[0]):]
+
+
+def test_prefix_table_reclaims_dead_slots_instead_of_raising():
+    """Regression (ISSUE 10 satellite): keys that were touched but never
+    cached (admission failed, or never fetched) used to hold their
+    key_to_idx slot forever — long one-hit-heavy traces exhausted
+    max_objects and crashed with "prefix table full".  Dead slots are
+    now reclaimed, stalest first."""
+    cache = DelayedHitPrefixCache(capacity=1.0, policy="lru", max_objects=4)
+    for i in range(20):                     # 5x the table size
+        cache.touch(f"k{i}", float(i))
+    assert len(cache.key_to_idx) <= 4
+    # the survivors are the most recently touched keys
+    assert "k19" in cache.key_to_idx
+    assert "k0" not in cache.key_to_idx
+    # a reclaimed slot restarts with clean statistics
+    i19 = cache.key_to_idx["k19"]
+    assert cache.obj.count[i19] == 1.0
+    assert not cache.obj.cached[i19]
+
+
+def test_prefix_table_raises_only_when_every_slot_is_live():
+    cache = DelayedHitPrefixCache(capacity=2.0, policy="lru", max_objects=2)
+    stats = EngineStats()
+    for j, k in enumerate(["a", "b"]):
+        i = cache.touch(k, float(j))
+        cache.obj.in_flight[i] = True
+        cache.obj.issue_t[i] = float(j)
+        entry = PrefixEntry(k, 10, 1.0, complete_t=10.0 + j)
+        assert cache.admit(entry, 10.0 + j, stats)
+    with pytest.raises(RuntimeError, match="prefix table full"):
+        cache.touch("c", 20.0)
+
+
+def test_engine_survives_one_hit_flood_at_small_max_objects():
+    """End-to-end: far more distinct never-reused prefixes than table
+    slots, with admissions failing (entries larger than capacity) — the
+    engine must keep serving instead of crashing."""
+    eng = ServeEngine(capacity=0.5, policy="lru",
+                      latency=LatencyModel(base_s=0.01, per_token_s=0.0,
+                                           stochastic=False),
+                      state_size_fn=lambda n: 1.0, hedging=False,
+                      max_objects=8)
+    for i in range(200):
+        eng.request(0.1 * i, f"one_hit_{i}", 10)
+    assert eng.stats.misses == 200
+    assert len(eng.cache.key_to_idx) <= 8

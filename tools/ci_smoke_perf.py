@@ -88,7 +88,12 @@ def _check_history(payload: dict, name: str) -> None:
 def _serving_canary(p: dict) -> bool:
     """The serving tail grid: >= 2 scenarios x {hedging on, off} single-tier
     rows with numeric p50/p99, plus hierarchy-mode and SLO-search rows —
-    the surface every future SLO/robustness claim is measured on."""
+    the surface every future SLO/robustness claim is measured on.  Since
+    the fault-tolerance layer (DESIGN.md §15) the grid must also carry
+    both replica scenarios — degraded_replica and origin_outage rows with
+    a numeric shed_rate and n_replicas >= 2 — and the brownout-flip
+    headline: a degraded_replica SLO-search row with a numeric
+    req/s-at-SLO (the row PR 6 recorded as unattainable single-origin)."""
     rows = p.get("rows", [])
     single = {(r.get("scenario"), r.get("hedging")) for r in rows
               if r.get("mode") == "single"
@@ -98,11 +103,22 @@ def _serving_canary(p: dict) -> bool:
     scenarios = {s for s, _ in single}
     both_hedge = {s for s in scenarios
                   if (s, True) in single and (s, False) in single}
+    replica_ok = all(any(
+        r.get("mode") == "single" and r.get("scenario") == s
+        and isinstance(r.get("shed_rate"), (int, float))
+        and isinstance(r.get("fail_rate"), (int, float))
+        and isinstance(r.get("n_replicas"), int) and r["n_replicas"] >= 2
+        for r in rows) for s in ("degraded_replica", "origin_outage"))
+    flip_ok = any(r.get("mode") == "slo_search"
+                  and r.get("scenario") == "degraded_replica"
+                  and isinstance(r.get("req_s_at_slo"), (int, float))
+                  for r in rows)
     return (len(both_hedge) >= 2
             and any(r.get("mode") == "hier" for r in rows)
             and any(r.get("mode") == "slo_search"
                     and isinstance(r.get("req_s_at_slo"), (int, float))
                     for r in rows)
+            and replica_ok and flip_ok
             and isinstance(p.get("depth_hists"), dict)
             and len(p["depth_hists"]) > 0)
 
